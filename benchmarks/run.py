@@ -1,0 +1,220 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows per benchmark plus timing, and a
+modeled-vs-paper comparison where the paper reports numbers.
+
+  table1     — Table I device comparison (TMR, switching, write energy)
+  fig3       — Fig. 3 write latency/energy vs voltage, AFMTJ vs MTJ
+  fig4       — Fig. 4 system speedup/energy vs CPU across 6 workloads
+  validation — Sec. II-A validation (TMR ~80%, ps switching, threshold)
+  archmap    — beyond-paper: 10 LM archs mapped onto the IMC hierarchy
+  kernels    — Pallas kernel microbenches (interpret mode) vs jnp oracle
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _t(fn, *a, **k):
+    t0 = time.time()
+    out = fn(*a, **k)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+        out)
+    return out, (time.time() - t0) * 1e6
+
+
+def bench_table1():
+    """Table I: MTJ vs AFMTJ characteristics."""
+    from repro.core.device import simulate_write
+    from repro.core.params import AFMTJ_PARAMS, MTJ_PARAMS
+    from repro.core.tmr import tmr_ratio
+
+    print("# table1: Table I device comparison")
+    print("name,us_per_call,derived")
+    for name, p, n, dt in [("mtj", MTJ_PARAMS, 40000, 0.1e-12),
+                           ("afmtj", AFMTJ_PARAMS, 16000, 0.05e-12)]:
+        r, us = _t(simulate_write, p, 1.0, n_steps=n, dt=dt)
+        print(f"table1.{name}.tmr_pct,{us:.0f},{tmr_ratio(p)*100:.0f}")
+        print(f"table1.{name}.switch_ps,{us:.0f},{float(r.t_switch)*1e12:.1f}")
+        print(f"table1.{name}.write_fj,{us:.0f},{float(r.energy)*1e15:.1f}")
+    print("# paper: MTJ TMR 80-120%, switch 1-2ns, ~300-480fJ; "
+          "AFMTJ TMR up to 500% (validated ~80%), 10-100ps, 20-100fJ")
+
+
+def bench_fig3():
+    """Fig. 3: write latency (a) and energy (b) vs input voltage."""
+    from repro.core.device import write_sweep
+    from repro.core.params import (AFMTJ_PARAMS, MTJ_PARAMS,
+                                   PAPER_FIG3_AFMTJ, PAPER_FIG3_MTJ)
+
+    print("# fig3: write latency/energy vs voltage")
+    print("name,us_per_call,derived")
+    voltages = jnp.asarray([0.5, 0.6, 0.7, 0.8, 0.9, 1.0, 1.1, 1.2])
+    out = {}
+    for name, p, n, dt in [("afmtj", AFMTJ_PARAMS, 16000, 0.05e-12),
+                           ("mtj", MTJ_PARAMS, 60000, 0.1e-12)]:
+        r, us = _t(write_sweep, p, voltages, n_steps=n, dt=dt)
+        out[name] = r
+        for i, v in enumerate(np.asarray(voltages)):
+            lat = float(r.write_latency[i]) * 1e12
+            en = float(r.energy[i]) * 1e15
+            print(f"fig3.{name}.latency_ps@{v:.1f}V,{us/8:.0f},{lat:.1f}")
+            print(f"fig3.{name}.energy_fJ@{v:.1f}V,{us/8:.0f},{en:.1f}")
+    for (v, lat, en), dev in [(PAPER_FIG3_AFMTJ[0], "afmtj"),
+                              (PAPER_FIG3_MTJ[0], "mtj")]:
+        i = int(np.argmin(np.abs(np.asarray(voltages) - v)))
+        ml = float(out[dev].write_latency[i])
+        me = float(out[dev].energy[i])
+        print(f"# {dev}@{v}V modeled {ml*1e12:.0f}ps/{me*1e15:.1f}fJ "
+              f"vs paper {lat*1e12:.0f}ps/{en*1e15:.1f}fJ "
+              f"(err {100*(ml-lat)/lat:+.1f}%/{100*(me-en)/en:+.1f}%)")
+    la = float(out['mtj'].write_latency[5] / out['afmtj'].write_latency[5])
+    ea = float(out['mtj'].energy[5] / out['afmtj'].energy[5])
+    print(f"# ratios@1.0V: latency {la:.1f}x (paper ~8x), energy {ea:.1f}x (paper ~9x)")
+
+
+def bench_fig4():
+    """Fig. 4: system-level speedup (a) and energy savings (b) vs CPU."""
+    from repro.imc.evaluate import evaluate_system, summarize
+
+    print("# fig4: hierarchical IMC vs ARM Cortex-A72")
+    print("name,us_per_call,derived")
+    paper = {"bnn": 55.4, "mat_add": 16.5}
+    for kind in ("afmtj", "mtj"):
+        res, us = _t(evaluate_system, kind)
+        for name, r in res.items():
+            print(f"fig4.{kind}.{name}.speedup,{us/6:.0f},{r.speedup:.1f}")
+            print(f"fig4.{kind}.{name}.energy_saving,{us/6:.0f},{r.energy_saving:.1f}")
+        sp, es = summarize(res)
+        print(f"fig4.{kind}.avg.speedup,{us/6:.0f},{sp:.1f}")
+        print(f"fig4.{kind}.avg.energy_saving,{us/6:.0f},{es:.1f}")
+        if kind == "afmtj":
+            for w, pv in paper.items():
+                mv = res[w].speedup
+                print(f"# afmtj {w}: modeled {mv:.1f}x vs paper {pv}x "
+                      f"(err {100*(mv-pv)/pv:+.1f}%)")
+            print(f"# afmtj avg: modeled {sp:.1f}x/{es:.1f}x vs paper 17.5x/19.9x")
+        else:
+            print(f"# mtj avg: modeled {sp:.1f}x/{es:.1f}x vs paper 6x/2.3x")
+
+
+def bench_validation():
+    """Sec. II-A: validation against fabricated AFMTJs."""
+    from repro.core.device import simulate_write
+    from repro.core.params import AFMTJ_PARAMS
+    from repro.core.tmr import tmr_ratio
+
+    print("# validation: TMR + switching-dynamics checks")
+    print("name,us_per_call,derived")
+    print(f"validation.tmr_pct,0,{tmr_ratio(AFMTJ_PARAMS)*100:.1f}")
+    r, us = _t(simulate_write, AFMTJ_PARAMS, 1.0, n_steps=16000, dt=0.05e-12)
+    ps = float(r.t_switch) * 1e12
+    print(f"validation.switch_ps@1V,{us:.0f},{ps:.1f}")
+    print(f"validation.ps_scale_ok,0,{int(10 < ps < 500)}")
+    r_low, _ = _t(simulate_write, AFMTJ_PARAMS, 0.15, n_steps=8000, dt=0.05e-12)
+    print(f"validation.below_threshold_no_switch,0,{int(not bool(r_low.switched))}")
+    # intrinsic switching-latency trend (paper: 65ps@0.5V -> 20ps@1.2V)
+    r05, _ = _t(simulate_write, AFMTJ_PARAMS, 0.5, n_steps=16000, dt=0.05e-12)
+    r12, _ = _t(simulate_write, AFMTJ_PARAMS, 1.2, n_steps=16000, dt=0.05e-12)
+    ratio = float(r05.t_switch / r12.t_switch)
+    print(f"validation.intrinsic_ratio_0p5_1p2,0,{ratio:.2f}")
+    print(f"# paper intrinsic ratio 65/20 = 3.25; modeled {ratio:.2f} "
+          "(shape reproduced; absolute times ~3-4x paper — see EXPERIMENTS.md)")
+
+
+def bench_archmap():
+    """Beyond-paper: decode-step inference of the 10 archs on AFMTJ IMC."""
+    from repro.configs.registry import ARCHS
+    from repro.imc.mapping import map_all
+
+    print("# archmap: LM architectures on the IMC hierarchy (per decode token)")
+    print("name,us_per_call,derived")
+    out, us = _t(map_all, ARCHS)
+    for kind in ("afmtj", "mtj"):
+        for name, r in out[kind].items():
+            print(f"archmap.{kind}.{name}.speedup_vs_cpu,{us/20:.0f},{r.speedup:.1f}")
+            print(f"archmap.{kind}.{name}.energy_saving,{us/20:.0f},"
+                  f"{r.energy_saving:.1f}")
+    a, m = out["afmtj"], out["mtj"]
+    gain = np.mean([a[k].speedup / m[k].speedup for k in a])
+    print(f"# afmtj-vs-mtj mean decode speedup gain: {gain:.2f}x")
+
+
+def bench_kernels():
+    """Pallas kernels (interpret mode) vs jnp oracle — correctness + timing."""
+    from repro.core import llg
+    from repro.core.params import AFMTJ_PARAMS
+    from repro.kernels import ops, ref
+
+    print("# kernels: pallas (interpret) vs ref")
+    print("name,us_per_call,derived")
+    th = jnp.linspace(0.05, 0.25, 512)
+    m0 = jax.vmap(lambda t: llg.initial_state(AFMTJ_PARAMS, t, 0.3))(th)
+    state = ops.pack_states(m0, jnp.linspace(0.3, 1.2, 512))
+    for steps in (100, 400):
+        (ok, uk) = _t(ops.llg_rk4, state, AFMTJ_PARAMS, 0.1e-12, steps)
+        (orf, ur) = _t(ref.ref_llg_rk4, state, AFMTJ_PARAMS, 0.1e-12, steps)
+        err = float(jnp.max(jnp.abs(ok[0][:6] - orf[0][:6]))) if isinstance(ok, tuple) else float(jnp.max(jnp.abs(ok[:6] - orf[:6])))
+        print(f"kernels.llg_rk4.{steps}steps,{uk:.0f},maxerr={err:.1e}")
+        print(f"kernels.llg_rk4_ref.{steps}steps,{ur:.0f},1")
+    v = jax.random.uniform(jax.random.PRNGKey(0), (256, 512))
+    g = jax.random.uniform(jax.random.PRNGKey(1), (512, 256)) * 3.4e-4
+    (o1, u1) = _t(ops.bitline_mac, v, g, 6, i_max=0.05)
+    (o2, u2) = _t(ref.ref_bitline_mac, v, g, 6, i_max=0.05)
+    print(f"kernels.bitline_mac.256x512x256,{u1:.0f},"
+          f"match={int(bool(jnp.allclose(o1, o2, rtol=1e-5)))}")
+    a = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), (256, 512)))
+    w = jnp.sign(jax.random.normal(jax.random.PRNGKey(3), (512, 256)))
+    (o3, u3) = _t(ops.xnor_gemm, a, w)
+    (o4, u4) = _t(ref.ref_xnor_gemm, a, w)
+    print(f"kernels.xnor_gemm.256x512x256,{u3:.0f},"
+          f"match={int(bool(jnp.allclose(o3, o4)))}")
+
+
+def bench_wer():
+    """Beyond-paper: thermal Monte-Carlo write-error rate vs pulse width —
+    the reliability spec a write controller binds against."""
+    from repro.core.montecarlo import write_error_rate
+    from repro.core.params import AFMTJ_PARAMS
+
+    print("# wer: write-error rate vs pulse width (AFMTJ @1.0V, 32 thermal samples)")
+    print("name,us_per_call,derived")
+    for pulse in (150e-12, 250e-12, 400e-12):
+        w, us = _t(write_error_rate, AFMTJ_PARAMS, 1.0, pulse, n_samples=32)
+        print(f"wer.afmtj.1V.{pulse*1e12:.0f}ps,{us:.0f},{float(w):.3f}")
+    print("# mean intrinsic t_sw ~123ps; a 2x margin pulse drives WER -> 0")
+
+
+BENCHES = {
+    "table1": bench_table1,
+    "fig3": bench_fig3,
+    "fig4": bench_fig4,
+    "validation": bench_validation,
+    "archmap": bench_archmap,
+    "kernels": bench_kernels,
+    "wer": bench_wer,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(BENCHES), default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    t0 = time.time()
+    for n in names:
+        print(f"\n=== {n} " + "=" * (60 - len(n)))
+        BENCHES[n]()
+    print(f"\ntotal {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

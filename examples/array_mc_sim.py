@@ -1,0 +1,52 @@
+"""Array-scale Monte-Carlo write simulation using the Pallas LLG kernel.
+
+Simulates every cell of an AFMTJ subarray (with per-cell voltage variation
+from IR drop) through the dual-sublattice LLG dynamics in one kernel launch
+— the TPU-native replacement for the paper's per-cell SPICE runs.  Reports
+the write-latency distribution and worst-case cell (what sets the array's
+pulse width + write-error margin).
+
+    PYTHONPATH=src python examples/array_mc_sim.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import llg
+from repro.core.params import AFMTJ_PARAMS
+from repro.kernels import ops
+
+ROWS, COLS = 64, 64
+DT = 0.1e-12
+N_STEPS = 4000
+
+
+def main():
+    n = ROWS * COLS
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+
+    # thermal spread of initial angles + IR-drop voltage gradient down rows
+    theta = jnp.abs(jax.random.normal(k1, (n,))) * 0.112 + 0.02
+    phi = jax.random.uniform(k2, (n,), maxval=2 * jnp.pi)
+    m0 = jax.vmap(lambda t, f: llg.initial_state(AFMTJ_PARAMS, t, f))(theta, phi)
+    row = jnp.arange(n) // COLS
+    v = 1.0 - 0.15 * (row / ROWS)          # 1.0 V driver, 15% IR drop
+
+    state = ops.pack_states(m0, v)
+    out = ops.llg_rk4(state, AFMTJ_PARAMS, DT, N_STEPS)
+    _, cross = ops.unpack_states(out, n)
+
+    t_sw = np.asarray(cross) * DT * 1e12
+    switched = t_sw < N_STEPS * DT * 1e12
+    print(f"array {ROWS}x{COLS}: {switched.mean()*100:.1f}% switched "
+          f"within {N_STEPS*DT*1e12:.0f} ps")
+    ok = t_sw[switched]
+    print(f"t_switch: mean {ok.mean():.0f} ps, p50 {np.percentile(ok,50):.0f}, "
+          f"p99 {np.percentile(ok,99):.0f}, max {ok.max():.0f} ps")
+    print(f"=> array write pulse must cover the worst cell: "
+          f"{ok.max()*1.05 + 40:.0f} ps (margin + RC)")
+
+
+if __name__ == "__main__":
+    main()

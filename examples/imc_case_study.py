@@ -1,0 +1,34 @@
+"""IMC case study: the paper's Fig. 4 system-level evaluation + the
+beyond-paper mapping of the 10 LM architectures onto the AFMTJ hierarchy.
+
+    PYTHONPATH=src python examples/imc_case_study.py
+"""
+from repro.configs.registry import ARCHS
+from repro.imc.evaluate import evaluate_system, summarize
+from repro.imc.mapping import map_all
+
+
+def main():
+    print("=== Hierarchical IMC vs ARM Cortex-A72 (paper Fig. 4) ===\n")
+    for kind in ("afmtj", "mtj"):
+        res = evaluate_system(kind)
+        print(f"--- {kind.upper()}-based IMC")
+        for name, r in res.items():
+            print(f"  {name:14s} speedup {r.speedup:6.1f}x   "
+                  f"energy saving {r.energy_saving:6.1f}x")
+        sp, es = summarize(res)
+        print(f"  {'AVERAGE':14s} speedup {sp:6.1f}x   energy saving {es:6.1f}x\n")
+    print("paper: AFMTJ 17.5x / 19.9x (bnn 55.4x, mat_add 16.5x); MTJ 6x / 2.3x\n")
+
+    print("=== Beyond paper: LM decode on the AFMTJ crossbar hierarchy ===\n")
+    out = map_all(ARCHS)
+    print(f"{'arch':28s} {'afmtj speedup':>14} {'afmtj energy':>13} "
+          f"{'mtj speedup':>12}")
+    for name in ARCHS:
+        a, m = out["afmtj"][name], out["mtj"][name]
+        print(f"{name:28s} {a.speedup:13.1f}x {a.energy_saving:12.1f}x "
+              f"{m.speedup:11.1f}x")
+
+
+if __name__ == "__main__":
+    main()

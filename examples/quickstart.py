@@ -1,0 +1,39 @@
+"""Quickstart: simulate AFMTJ vs MTJ write operations (paper Fig. 3).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core.device import simulate_write, write_sweep
+from repro.core.params import AFMTJ_PARAMS, MTJ_PARAMS
+from repro.core.tmr import tmr_ratio
+
+
+def main():
+    print("=== AFMTJ vs MTJ write characteristics (dual-sublattice LLG) ===\n")
+    print(f"AFMTJ: B_exchange={AFMTJ_PARAMS.b_exchange:.2f} T, "
+          f"TMR={tmr_ratio(AFMTJ_PARAMS)*100:.0f}%, "
+          f"R_P={AFMTJ_PARAMS.r_parallel:.0f} Ohm")
+    print(f"MTJ:   single FM layer, TMR={tmr_ratio(MTJ_PARAMS)*100:.0f}%\n")
+
+    voltages = jnp.asarray([0.5, 0.8, 1.0, 1.2])
+    a = write_sweep(AFMTJ_PARAMS, voltages, n_steps=16000, dt=0.05e-12)
+    m = write_sweep(MTJ_PARAMS, voltages, n_steps=60000, dt=0.1e-12)
+
+    print(f"{'V':>5} | {'AFMTJ lat':>10} {'AFMTJ E':>9} | "
+          f"{'MTJ lat':>10} {'MTJ E':>9} | {'speedup':>7}")
+    for i, v in enumerate(voltages):
+        print(f"{float(v):5.1f} | {float(a.write_latency[i])*1e12:8.0f}ps "
+              f"{float(a.energy[i])*1e15:7.1f}fJ | "
+              f"{float(m.write_latency[i])*1e12:8.0f}ps "
+              f"{float(m.energy[i])*1e15:7.1f}fJ | "
+              f"{float(m.write_latency[i]/a.write_latency[i]):6.1f}x")
+
+    r = simulate_write(AFMTJ_PARAMS, 1.0, n_steps=16000, dt=0.05e-12)
+    print(f"\n@1.0V: {float(r.write_latency)*1e12:.0f} ps / "
+          f"{float(r.energy)*1e15:.1f} fJ  (paper: 164 ps / 55.7 fJ)")
+    print("Neel vector reversed:", bool(r.switched))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""End-to-end training driver example.
+
+Smoke (CPU, ~2 min): trains a reduced qwen2-family model for 200 steps with
+checkpointing + fault-tolerant loop; loss drops from ~6.2 to <4.
+
+    PYTHONPATH=src python examples/train_lm.py
+    PYTHONPATH=src python examples/train_lm.py --arch mamba2-780m --steps 50
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", default="200")
+    ap.add_argument("--batch", default="8")
+    ap.add_argument("--seq", default="128")
+    args = ap.parse_args()
+    train_main([
+        "--arch", args.arch, "--preset", "smoke",
+        "--steps", args.steps, "--batch", args.batch, "--seq", args.seq,
+        "--lr", "3e-3", "--log-every", "10",
+        "--ckpt-dir", "checkpoints/example",
+    ])
+
+
+if __name__ == "__main__":
+    main()

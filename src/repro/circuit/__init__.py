@@ -1,0 +1,10 @@
+"""Circuit-level behavioral models (paper Sec. III-B, IV-A).
+
+Replaces the HSPICE netlist with TPU-friendly behavioral physics:
+  bitline   — RC transients of precharge/discharge through device conductances
+  senseamp  — latch-type sense amplifier: delay vs differential, dual-reference
+  subarray  — rows x cols 1T1J array: read / write / multi-row bit-line logic
+"""
+from repro.circuit.bitline import BitlineParams, bitline_settle_time, multi_row_current  # noqa: F401
+from repro.circuit.senseamp import SenseAmpParams, sense_delay, resolve_logic  # noqa: F401
+from repro.circuit.subarray import Subarray, SubarrayTimings, make_subarray  # noqa: F401

@@ -1,0 +1,91 @@
+"""Bit-line RC transient model.
+
+A bit line with total capacitance C_bl is precharged to V_pre and discharges
+through the parallel conductance of the activated cells (each cell: access
+transistor R_on in series with the junction R_j).  The transient is the
+classic single-pole exponential
+
+    V_bl(t) = V_pre * exp(-t * G_eff / C_bl),
+
+so settle/charge times are analytic — no netlist solve needed.  Multi-row
+activation (the paper's charge-sharing logic) sums activated-cell
+conductances; the sense amplifier classifies the resulting current level.
+
+Capacitance scales with the number of rows hanging off the line
+(C_bl = rows * c_cell + c_wire_fixed), which is how the hierarchy levels
+(L1 subarrays vs main-memory subarrays) get different RC constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import DeviceParams
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BitlineParams:
+    c_per_cell: float = 0.03e-15   # drain + wire capacitance per attached cell [F]
+    c_fixed: float = 2.0e-15       # SA input + periphery capacitance [F]
+    r_access: float = 1.0e3        # access transistor on-resistance [Ohm]
+    r_driver: float = 200.0        # write-driver output resistance [Ohm]
+    t_wl_setup: float = 20e-12     # word-line decode/assert overhead [s]
+    v_precharge: float = 1.0       # precharge level [V]
+    v_read: float = 0.1            # read voltage across the cell [V]
+    rows: int = dataclasses.field(default=256, metadata=dict(static=True))
+
+    @property
+    def c_total(self) -> float:
+        return self.rows * self.c_per_cell + self.c_fixed
+
+
+def cell_conductance(g_junction: jnp.ndarray, bl: BitlineParams) -> jnp.ndarray:
+    """Series combination of access transistor and junction."""
+    return g_junction / (1.0 + bl.r_access * g_junction)
+
+
+def bitline_settle_time(
+    g_junction: jnp.ndarray, bl: BitlineParams, settle_frac: float = 0.95
+) -> jnp.ndarray:
+    """Time for the bit line to settle to within (1-settle_frac) of final value.
+
+    t = ln(1/(1-frac)) * C_bl / G_eff — the RC component of read and of the
+    write-path charge-up (the `t_rc` consumed by core.device.simulate_write).
+    """
+    g_eff = cell_conductance(g_junction, bl)
+    return jnp.log(1.0 / (1.0 - settle_frac)) * bl.c_total / g_eff
+
+
+def write_path_rc(bl: BitlineParams, settle_frac: float = 0.95) -> float:
+    """Write-path overhead: the driver (not the cell) charges the bit line."""
+    import math
+
+    return math.log(1.0 / (1.0 - settle_frac)) * bl.r_driver * bl.c_total + bl.t_wl_setup
+
+
+def multi_row_current(
+    bits: jnp.ndarray, dev: DeviceParams, bl: BitlineParams
+) -> jnp.ndarray:
+    """Aggregate read current for multi-row activation (charge sharing).
+
+    bits: (..., n_rows) in {0,1}; bit==1 -> cell in parallel (low-R) state.
+    Returns total bit-line current at v_read [A].  This is the analog quantity
+    the sense amp classifies into logic outcomes.
+    """
+    g_p = 1.0 / dev.r_parallel
+    g_ap = 1.0 / dev.r_antiparallel
+    g_cells = jnp.where(bits > 0, g_p, g_ap)
+    g_eff = cell_conductance(g_cells, bl)
+    return bl.v_read * jnp.sum(g_eff, axis=-1)
+
+
+def logic_current_levels(n_rows: int, dev: DeviceParams, bl: BitlineParams):
+    """The n_rows+1 distinct current levels for k parallel-state cells
+    (k = 0..n_rows) — used to place sense-amp references."""
+    g_p = cell_conductance(jnp.asarray(1.0 / dev.r_parallel), bl)
+    g_ap = cell_conductance(jnp.asarray(1.0 / dev.r_antiparallel), bl)
+    k = jnp.arange(n_rows + 1)
+    return bl.v_read * (k * g_p + (n_rows - k) * g_ap)

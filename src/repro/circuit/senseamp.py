@@ -1,0 +1,90 @@
+"""Latch-type sense amplifier behavioral model.
+
+Delay follows the standard latch regeneration law
+
+    t_sa = tau_latch * ln(V_logic / |dV_in|) + t_setup,
+
+so small input differentials (near-reference currents) sense slower — this is
+what makes multi-row logic slightly slower than single-row reads.  Dual
+references implement XOR/XNOR (output = current between the two refs), per
+Pinatubo-style bit-line computing; single references give (N)AND / (N)OR /
+MAJ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.circuit.bitline import BitlineParams, logic_current_levels, multi_row_current
+from repro.core.params import DeviceParams
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SenseAmpParams:
+    tau_latch: float = 20e-12     # regeneration time constant [s]
+    t_setup: float = 20e-12       # precharge/strobe overhead [s]
+    v_logic: float = 1.0          # full-swing output [V]
+    r_trans: float = 5.0e3        # current->voltage transimpedance [Ohm]
+    e_per_sense: float = 2.0e-15  # energy per sense operation [J]
+    offset_sigma: float = 0.0     # input-referred offset [V] (MC mode)
+
+
+def sense_delay(di: jnp.ndarray, sa: SenseAmpParams) -> jnp.ndarray:
+    """Sense time for a current differential di [A] from the reference."""
+    dv = jnp.abs(di) * sa.r_trans
+    dv = jnp.maximum(dv, 1e-6)
+    return sa.tau_latch * jnp.log(sa.v_logic / jnp.minimum(dv, sa.v_logic)) + sa.t_setup
+
+
+def _refs_for(op: str, n_rows: int, dev: DeviceParams, bl: BitlineParams):
+    """Reference current(s) placed between the k-parallel-cell levels."""
+    lv = logic_current_levels(n_rows, dev, bl)
+    mid = lambda a, b: 0.5 * (lv[a] + lv[b])
+    if op in ("and", "nand"):       # true when ALL k bits are 1
+        return (mid(n_rows - 1, n_rows),)
+    if op in ("or", "nor"):         # true when ANY bit is 1
+        return (mid(0, 1),)
+    if op in ("xor", "xnor"):       # true when exactly one of two bits is 1
+        assert n_rows == 2, "xor/xnor uses 2-row activation"
+        return (mid(0, 1), mid(1, 2))
+    if op == "maj":                 # majority of 3
+        assert n_rows == 3
+        return (mid(1, 2),)
+    raise ValueError(f"unknown logic op {op}")
+
+
+def resolve_logic(
+    bits: jnp.ndarray,
+    op: str,
+    dev: DeviceParams,
+    bl: BitlineParams,
+    sa: SenseAmpParams,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full circuit path for an in-array logic op on ``bits`` (..., n_rows).
+
+    Returns (boolean output, sense delay).  The output is derived from the
+    *analog* current level — i.e. the logic emerges from the device TMR +
+    circuit thresholds, not from a lookup table.
+    """
+    n_rows = bits.shape[-1]
+    i_bl = multi_row_current(bits, dev, bl)
+    refs = _refs_for(op, n_rows, dev, bl)
+    if op in ("and", "or", "maj"):
+        out = i_bl > refs[0]
+        di = i_bl - refs[0]
+    elif op in ("nand", "nor"):
+        out = i_bl < refs[0]
+        di = i_bl - refs[0]
+    elif op == "xor":
+        out = jnp.logical_and(i_bl > refs[0], i_bl < refs[1])
+        di = jnp.minimum(jnp.abs(i_bl - refs[0]), jnp.abs(i_bl - refs[1]))
+    elif op == "xnor":
+        out = jnp.logical_or(i_bl < refs[0], i_bl > refs[1])
+        di = jnp.minimum(jnp.abs(i_bl - refs[0]), jnp.abs(i_bl - refs[1]))
+    else:
+        raise ValueError(op)
+    return out, sense_delay(di, sa)

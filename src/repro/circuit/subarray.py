@@ -1,0 +1,143 @@
+"""AFMTJ/MTJ subarray model: rows x cols 1T1J array + periphery.
+
+``make_subarray`` runs the *device* simulation once at the array's write
+voltage to extract write latency/energy (the expensive LLG solve), and the
+*circuit* models for read/logic timing — producing a ``SubarrayTimings``
+record that the IMC hierarchy consumes.  Functional state (the stored bits)
+lives in a plain jnp array so whole-array logic ops are vectorized.
+
+Latency model per op (row-granular, all columns in parallel):
+  read   : t_bl_settle + t_sa
+  logic  : t_bl_settle + t_sa(multi-row differential)  [2-3 activated rows]
+  write  : t_write(V) from the LLG device model (incl. bit-line RC)
+Energy per op = per-column device/SA energy * active columns + driver overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.circuit.bitline import BitlineParams, bitline_settle_time, write_path_rc
+from repro.circuit.senseamp import SenseAmpParams, resolve_logic, sense_delay
+from repro.core.device import read_energy, simulate_write
+from repro.core.params import AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams
+
+
+@dataclasses.dataclass(frozen=True)
+class SubarrayTimings:
+    """Per-operation latency [s] / energy-per-bit [J] for one subarray."""
+
+    t_read: float
+    t_write: float
+    t_logic2: float          # 2-row ops (nand/nor/and/or/xor)
+    t_logic3: float          # 3-row (majority — the adder carry primitive)
+    e_read_bit: float
+    e_write_bit: float
+    e_logic_bit: float
+    rows: int
+    cols: int
+
+    @property
+    def row_bits(self) -> int:
+        return self.cols
+
+
+@dataclasses.dataclass
+class Subarray:
+    """Functional + timed subarray."""
+
+    dev: DeviceParams
+    bl: BitlineParams
+    sa: SenseAmpParams
+    timings: SubarrayTimings
+    state: jnp.ndarray  # (rows, cols) uint8 bits
+
+    # ---- functional ops (used by tests & the BNN example) -----------------
+    def write_row(self, row: int, bits: jnp.ndarray) -> "Subarray":
+        self.state = self.state.at[row].set(bits.astype(jnp.uint8))
+        return self
+
+    def read_row(self, row: int) -> jnp.ndarray:
+        return self.state[row]
+
+    def logic(self, rows: tuple, op: str) -> jnp.ndarray:
+        """In-array logic across the given rows, resolved through the analog
+        bit-line + sense-amp path (per-column)."""
+        bits = self.state[jnp.asarray(rows)]            # (k, cols)
+        out, _ = resolve_logic(bits.T, op, self.dev, self.bl, self.sa)
+        return out.astype(jnp.uint8)
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _characterize_write(kind: str, v_write: float):
+    """Pure-device write cost (t_rc = 0), cached across subarray builds."""
+    dev = AFMTJ_PARAMS if kind == "afmtj" else MTJ_PARAMS
+    n_steps, dt = (16000, 0.05e-12) if kind == "afmtj" else (40000, 0.1e-12)
+    wr = simulate_write(dev, v_write, n_steps=n_steps, dt=dt, t_rc=0.0)
+    return float(wr.write_latency), float(wr.energy)
+
+
+def _worst_case_logic_delay(op_rows: int, dev, bl, sa) -> float:
+    """Max sense delay across all input combinations of a k-row op."""
+    combos = np.array(
+        [[(i >> b) & 1 for b in range(op_rows)] for i in range(2**op_rows)],
+        dtype=np.float32,
+    )
+    op = "and" if op_rows != 3 else "maj"
+    _, delays = resolve_logic(jnp.asarray(combos), op, dev, bl, sa)
+    return float(jnp.max(delays))
+
+
+def make_subarray(
+    kind: Literal["afmtj", "mtj"],
+    rows: int = 256,
+    cols: int = 256,
+    v_write: float = 1.0,
+    bl: BitlineParams | None = None,
+    sa: SenseAmpParams | None = None,
+) -> Subarray:
+    dev = AFMTJ_PARAMS if kind == "afmtj" else MTJ_PARAMS
+    bl = bl or BitlineParams(rows=rows)
+    sa = sa or SenseAmpParams()
+
+    # --- device-level write characterization (the LLG solve, cached) -------
+    t_rc = write_path_rc(bl)
+    t_sw, e_sw = _characterize_write(kind, v_write)
+    # t_rc enters additively (driver charges the line, then the pulse runs);
+    # overhead energy at the parallel-state conductance.
+    t_write = t_sw + t_rc
+    e_write = e_sw + v_write**2 / dev.r_parallel * t_rc
+
+    # --- circuit-level read/logic characterization --------------------------
+    g_worst = jnp.asarray(1.0 / dev.r_antiparallel)
+    t_settle = float(bitline_settle_time(g_worst, bl))
+    i_p = bl.v_read / dev.r_parallel
+    i_ap = bl.v_read / dev.r_antiparallel
+    t_sense = float(sense_delay(jnp.asarray((i_p - i_ap) / 2.0), sa))
+    t_read = t_settle + t_sense
+    t_logic2 = t_settle + _worst_case_logic_delay(2, dev, bl, sa)
+    t_logic3 = t_settle + _worst_case_logic_delay(3, dev, bl, sa)
+
+    e_read = read_energy(dev, t_read=t_read, v_read=bl.v_read) + sa.e_per_sense
+    e_logic = 2.0 * read_energy(dev, t_read=t_logic2, v_read=bl.v_read) + sa.e_per_sense
+
+    timings = SubarrayTimings(
+        t_read=t_read,
+        t_write=t_write,
+        t_logic2=t_logic2,
+        t_logic3=t_logic3,
+        e_read_bit=e_read,
+        e_write_bit=e_write,
+        e_logic_bit=e_logic,
+        rows=rows,
+        cols=cols,
+    )
+    state = jnp.zeros((rows, cols), dtype=jnp.uint8)
+    return Subarray(dev=dev, bl=bl, sa=sa, timings=timings, state=state)

@@ -1,0 +1,94 @@
+"""Architecture registry: ``--arch <id>`` lookup + reduced smoke configs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig
+from repro.configs import (  # noqa: F401
+    gemma2_2b,
+    internlm2_20b,
+    jamba_1_5_large_398b,
+    llama4_maverick_400b_a17b,
+    mamba2_780m,
+    olmoe_1b_7b,
+    qwen2_0_5b,
+    qwen2_vl_2b,
+    qwen3_8b,
+    seamless_m4t_large_v2,
+)
+
+ARCHS: Dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        gemma2_2b,
+        internlm2_20b,
+        qwen2_0_5b,
+        qwen3_8b,
+        qwen2_vl_2b,
+        llama4_maverick_400b_a17b,
+        olmoe_1b_7b,
+        seamless_m4t_large_v2,
+        mamba2_780m,
+        jamba_1_5_large_398b,
+    )
+}
+
+# Recommended grad-accumulation microbatch counts for train_4k at the
+# (data=16, model=16) production mesh, sized so saved activations fit HBM
+# with scan-over-layers remat (see DESIGN.md §4 + EXPERIMENTS.md §Dry-run).
+TRAIN_MICROBATCHES: Dict[str, int] = {
+    "gemma2-2b": 4,
+    "internlm2-20b": 8,
+    "qwen2-0.5b": 2,
+    "qwen3-8b": 4,
+    "qwen2-vl-2b": 2,
+    "llama4-maverick-400b-a17b": 8,
+    "olmoe-1b-7b": 2,
+    "seamless-m4t-large-v2": 2,
+    "mamba2-780m": 2,
+    "jamba-1.5-large-398b": 16,
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def smoke_config(name: str) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests: small widths/layers,
+    tiny vocab, few experts — same pattern & feature flags as the original."""
+    c = get_arch(name)
+    kw = dict(
+        name=c.name + "-smoke",
+        n_layers=len(c.pattern) * (2 if len(c.pattern) <= 4 else 1),
+        d_model=64,
+        n_heads=4 if c.n_heads else 0,
+        n_kv_heads=min(c.n_kv_heads, 2) if c.n_kv_heads else 0,
+        d_head=16 if c.n_heads else 0,
+        d_ff=128 if c.d_ff else 0,
+        vocab=512,
+        n_encoder_layers=2 if c.n_encoder_layers else 0,
+        frontend_positions=8 if c.frontend_positions else 0,
+        param_dtype="float32",
+        opt_state_dtype="float32",
+        compute_dtype="float32",
+    )
+    if c.moe is not None:
+        kw["moe"] = MoEConfig(
+            num_experts=4,
+            top_k=min(c.moe.top_k, 2),
+            d_expert=64,
+            interleave=c.moe.interleave,
+            shared_expert=c.moe.shared_expert,
+        )
+    if c.ssm is not None:
+        kw["ssm"] = SSMConfig(d_state=16, headdim=16, expand=2, d_conv=4, chunk=8)
+    if c.attn.mrope_sections is not None:
+        kw["attn"] = dataclasses.replace(c.attn, mrope_sections=(2, 3, 3))
+    if c.attn.sliding_window is not None:
+        att = kw.get("attn", c.attn)
+        kw["attn"] = dataclasses.replace(att, sliding_window=8)
+    return dataclasses.replace(c, **kw)

@@ -1,0 +1,14 @@
+"""Core AFMTJ/MTJ compact device model (the paper's primary contribution).
+
+Layers:
+  params      — physical constants + calibrated DeviceParams (Table II)
+  llg         — dual-sublattice LLG right-hand side + state helpers
+  integrator  — fixed-step RK4 (scan) + adaptive step-doubling RK4 (while)
+  tmr         — Julliere-type angular conductance / TMR readout
+  device      — write/read operations with self-consistent STT drive
+  montecarlo  — thermal ensembles (write-error rate, retention)
+"""
+from repro.core.params import AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams  # noqa: F401
+from repro.core.device import simulate_write, write_sweep, simulate_read  # noqa: F401
+from repro.core.llg import llg_rhs, neel_vector, initial_state  # noqa: F401
+from repro.core.tmr import conductance, resistance, tmr_ratio  # noqa: F401

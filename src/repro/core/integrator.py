@@ -1,0 +1,156 @@
+"""RK4 integrators for the LLG system (paper: adaptive RK4, 0.1 ps base step).
+
+Two implementations with identical physics:
+
+* ``integrate_fixed`` — fixed-step RK4 under ``lax.scan``.  Regular control
+  flow, TPU-native, used by the Pallas kernel and all sweeps.
+* ``integrate_adaptive`` — step-doubling adaptive RK4 under ``lax.while_loop``
+  (the paper's "adaptive fourth-order Runge-Kutta, 0.1 ps base step").  Used
+  to validate that 0.1 ps fixed stepping is converged (see tests).
+
+Both renormalize |m| after every step (the LLG flow conserves |m| exactly;
+RK4 drifts at O(h^5)).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.llg import llg_rhs, order_parameter_z, renormalize
+from repro.core.params import DeviceParams
+
+BASE_DT = 0.1e-12  # 0.1 ps (paper)
+
+RHS = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]  # (m, t) -> dm/dt
+
+
+def rk4_step(rhs: RHS, m: jnp.ndarray, t: jnp.ndarray, dt) -> jnp.ndarray:
+    k1 = rhs(m, t)
+    k2 = rhs(m + 0.5 * dt * k1, t + 0.5 * dt)
+    k3 = rhs(m + 0.5 * dt * k2, t + 0.5 * dt)
+    k4 = rhs(m + dt * k3, t + dt)
+    return renormalize(m + (dt / 6.0) * (k1 + 2.0 * k2 + 2.0 * k3 + k4))
+
+
+class Trace(NamedTuple):
+    """Per-step observables accumulated during integration."""
+
+    t_switch: jnp.ndarray      # first time order parameter crossed -thresh [s]
+    switched: jnp.ndarray      # bool
+    energy: jnp.ndarray        # integral of V^2 * G(theta) dt  [J]
+    final_m: jnp.ndarray       # state at t_end
+
+
+@partial(jax.jit, static_argnames=("n_steps", "record_trajectory"))
+def integrate_fixed(
+    m0: jnp.ndarray,
+    p: DeviceParams,
+    a_j_of_t: jnp.ndarray,        # (n_steps,) or scalar: STT field vs time [T]
+    dt: float = BASE_DT,
+    n_steps: int = 2000,
+    conductance_fn=None,          # optional: (m) -> G [S], for energy integral
+    voltage: float = 0.0,
+    switch_threshold: float = 0.9,
+    record_trajectory: bool = False,
+    thermal_sigma: float = 0.0,
+    rng: Optional[jax.Array] = None,
+) -> Tuple[Trace, Optional[jnp.ndarray]]:
+    """Fixed-step RK4 for n_steps.  Broadcasts over leading dims of m0."""
+    a_j_of_t = jnp.broadcast_to(jnp.asarray(a_j_of_t), (n_steps,))
+    batch_shape = m0.shape[:-2]
+
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    step_keys = jax.random.split(rng, n_steps)
+
+    def rhs_at(m, a_j, b_th):
+        return llg_rhs(m, p, a_j, b_th)
+
+    def body(carry, xs):
+        m, t, t_sw, sw, en = carry
+        a_j, key = xs
+        if thermal_sigma > 0.0:
+            b_th = thermal_sigma * jax.random.normal(key, m.shape)
+        else:
+            b_th = None
+        # Thermal field held constant across the RK4 substeps (Stratonovich
+        # midpoint-ish treatment; standard for LLG+RK4 at dt << 1/f_FMR).
+        m_next = rk4_step(lambda mm, tt: rhs_at(mm, a_j, b_th), m, t, dt)
+        opz = order_parameter_z(m_next)
+        crossed = opz < -switch_threshold
+        newly = jnp.logical_and(crossed, jnp.logical_not(sw))
+        t_sw = jnp.where(newly, t + dt, t_sw)
+        sw = jnp.logical_or(sw, crossed)
+        if conductance_fn is not None:
+            g = conductance_fn(m_next)
+            # stop accumulating energy once the pulse would be cut (post-switch
+            # margin handled by the caller); here we integrate the full window
+            # gated on "not yet switched" + one step.
+            en = en + jnp.where(sw, 0.0, voltage**2 * g * dt)
+        out = m_next if record_trajectory else None
+        return (m_next, t + dt, t_sw, sw, en), out
+
+    init = (
+        m0,
+        jnp.zeros(()),
+        jnp.full(batch_shape, jnp.inf),
+        jnp.zeros(batch_shape, dtype=bool),
+        jnp.zeros(batch_shape),
+    )
+    (m_f, _, t_sw, sw, en), traj = jax.lax.scan(
+        body, init, (a_j_of_t, step_keys)
+    )
+    return Trace(t_switch=t_sw, switched=sw, energy=en, final_m=m_f), traj
+
+
+@partial(jax.jit, static_argnames=())
+def integrate_adaptive(
+    m0: jnp.ndarray,
+    p: DeviceParams,
+    a_j: jnp.ndarray,
+    t_end: float,
+    dt0: float = BASE_DT,
+    rtol: float = 1e-6,
+    dt_min: float = 1e-15,
+    dt_max: float = 2e-12,
+    switch_threshold: float = 0.9,
+) -> Trace:
+    """Step-doubling adaptive RK4 (single junction; constant drive).
+
+    Error estimate: one full step vs two half steps; local error ~ |y2-y1|/15;
+    step accepted when err < rtol, new step = h * clip((rtol/err)^(1/5)).
+    """
+
+    def rhs(m, t):
+        return llg_rhs(m, p, a_j, None)
+
+    def cond(carry):
+        m, t, h, t_sw, sw = carry
+        return t < t_end
+
+    def body(carry):
+        m, t, h, t_sw, sw = carry
+        h = jnp.minimum(h, t_end - t)
+        y1 = rk4_step(rhs, m, t, h)
+        yh = rk4_step(rhs, m, t, 0.5 * h)
+        y2 = rk4_step(rhs, yh, t + 0.5 * h, 0.5 * h)
+        err = jnp.max(jnp.abs(y2 - y1)) / 15.0
+        accept = err < rtol
+        # PI-free step controller with safety 0.9
+        scale = 0.9 * (rtol / jnp.maximum(err, 1e-30)) ** 0.2
+        h_new = jnp.clip(h * jnp.clip(scale, 0.2, 5.0), dt_min, dt_max)
+        m_next = jnp.where(accept, y2, m)
+        t_next = jnp.where(accept, t + h, t)
+        opz = order_parameter_z(m_next)
+        crossed = opz < -switch_threshold
+        newly = jnp.logical_and(jnp.logical_and(accept, crossed), jnp.logical_not(sw))
+        t_sw = jnp.where(newly, t_next, t_sw)
+        sw = jnp.logical_or(sw, jnp.logical_and(accept, crossed))
+        return (m_next, t_next, h_new, t_sw, sw)
+
+    init = (m0, jnp.zeros(()), jnp.asarray(dt0), jnp.asarray(jnp.inf), jnp.asarray(False))
+    m_f, t_f, _, t_sw, sw = jax.lax.while_loop(cond, body, init)
+    return Trace(t_switch=t_sw, switched=sw, energy=jnp.zeros(()), final_m=m_f)

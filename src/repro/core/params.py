@@ -1,0 +1,161 @@
+"""Physical constants and device parameter sets (paper Table II).
+
+Units: SI throughout. Fields are magnetic *flux densities* in Tesla
+(B = mu0 * H); magnetizations in A/m; lengths in meters; time in seconds.
+
+Calibration provenance
+----------------------
+The paper gives Table II (P0=0.8, alpha=0.01, Ms0=600 emu/cm^3, J_AF=5e-3,
+45x45x0.45 nm free layer) but leaves J_AF's units and the RA product
+unspecified.  Two constants are therefore *calibrated* against the paper's
+own reported anchor points (Fig. 3):
+
+* ``ra_product`` — fixed by energy/latency consistency: the paper reports
+  (164 ps, 55.7 fJ) at 1.0 V for AFMTJ and (~1400 ps, ~480 fJ) for MTJ.
+  E = V^2/R * t  =>  R = V^2 t / E ~ 2.94 kOhm for *both* devices, i.e.
+  RA ~ 5.97 Ohm um^2 on a 45x45 nm pillar — the same barrier for both, which
+  matches the paper's "dimensions consistent with the UMN MTJ model" note.
+* ``b_exchange`` — the inter-sublattice exchange field implied by J_AF.
+  We interpret J_AF = 5e-3 J/m^2 as the interfacial exchange energy areal
+  density normalized over the sublattice-pair stack (six 0.45 nm planes,
+  Fig. 1 shows a multilayer AFM electrode): B_E = J_AF / (Ms * 6 t_f) =
+  5e-3 / (6e5 * 2.7e-9) = 3.09 T — the strong synthetic-AFM / weak-AFM
+  regime.  The paper's own data selects this normalization: the staggered
+  Neel-STT instability threshold is a_th ~ alpha*B_E, and with the
+  single-plane normalization (18.5 T) the threshold voltage would be
+  ~1.1 V, inconsistent with the paper's reported switching at 0.5 V
+  (Fig. 3); with B_E = 3.09 T the threshold sits at ~0.19 V and the
+  simulated write latency reproduces the paper's 164 ps @ 1.0 V anchor.
+
+The MTJ baseline uses UMN-model CoFeB defaults (Ms=1050 emu/cm^3,
+t_f=1.3 nm, P=0.6) per paper refs [5], [11].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+
+# --- physical constants (SI) -------------------------------------------------
+GAMMA = 1.760859630e11     # gyromagnetic ratio [rad / (s T)]
+MU0 = 1.25663706212e-6     # vacuum permeability [T m / A]
+KB = 1.380649e-23          # Boltzmann [J / K]
+HBAR = 1.054571817e-34     # reduced Planck [J s]
+QE = 1.602176634e-19       # elementary charge [C]
+
+EMU_PER_CC_TO_A_PER_M = 1.0e3   # 1 emu/cm^3 == 1e3 A/m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeviceParams:
+    """Compact-model parameters for one junction (AFMTJ or MTJ).
+
+    All fields are floats so the dataclass is a JAX pytree of scalars and can
+    be passed straight through jit/vmap/grad.
+    """
+
+    # -- magnetics ------------------------------------------------------------
+    ms: float            # saturation magnetization per sublattice [A/m]
+    alpha: float         # Gilbert damping
+    polarization: float  # spin polarization P0
+    b_aniso: float       # effective uniaxial PMA field (2Ku_eff/Ms) [T]
+    b_exchange: float    # inter-sublattice exchange field B_E [T]; 0 => FM/MTJ
+    # 2 (AFMTJ) or 1 (MTJ); static pytree metadata (not traced)
+    n_sublattices: int = dataclasses.field(default=2, metadata=dict(static=True))
+    # -- geometry ---------------------------------------------------------
+    lx: float = 45e-9
+    ly: float = 45e-9
+    lz: float = 0.45e-9      # free-layer thickness t_f
+    # -- transport ----------------------------------------------------------
+    ra_product: float = 5.97e-12   # resistance-area product [Ohm m^2]
+    tmr: float = 0.8               # TMR ratio (R_AP - R_P) / R_P
+    # -- spin torque ----------------------------------------------------------
+    beta_flt: float = 0.05         # field-like torque ratio b_J = beta * a_J
+    # -- thermal ----------------------------------------------------------
+    temperature: float = 300.0     # K
+
+    # ---- derived (python-level, cheap) ------------------------------------
+    @property
+    def area(self) -> float:
+        return self.lx * self.ly
+
+    @property
+    def volume(self) -> float:
+        return self.lx * self.ly * self.lz
+
+    @property
+    def r_parallel(self) -> float:
+        return self.ra_product / self.area
+
+    @property
+    def r_antiparallel(self) -> float:
+        return self.r_parallel * (1.0 + self.tmr)
+
+    @property
+    def stt_prefactor(self) -> float:
+        """a_J per unit current density: a_J = pref * J  [T per A/m^2]."""
+        return HBAR * self.polarization / (2.0 * QE * self.ms * self.lz)
+
+    @property
+    def thermal_stability(self) -> float:
+        """Delta = E_b / kT with E_b = (1/2) B_k Ms V (per sublattice)."""
+        e_b = 0.5 * self.b_aniso * self.ms * self.volume
+        return e_b / (KB * self.temperature)
+
+
+def _afmtj_params() -> DeviceParams:
+    ms = 600.0 * EMU_PER_CC_TO_A_PER_M          # Table II: Ms0 = 600 emu/cm^3
+    lz = 0.45e-9
+    # J_AF = 5e-3 J/m^2 normalized over the 6-plane sublattice stack (2.7 nm):
+    # B_E = 3.09 T.  See module docstring for why the paper's own Fig. 3 data
+    # selects this normalization.
+    j_af = 5e-3
+    b_exchange = j_af / (ms * 6.0 * lz)
+    # Thermal stability target Delta ~ 40 at 300 K per sublattice pair.
+    volume = 45e-9 * 45e-9 * lz
+    b_aniso = 2.0 * 40.0 * KB * 300.0 / (ms * volume)
+    return DeviceParams(
+        ms=ms,
+        alpha=0.01,              # Table II
+        polarization=0.8,        # Table II
+        b_aniso=b_aniso,
+        b_exchange=b_exchange,
+        n_sublattices=2,
+        lz=lz,
+    )
+
+
+def _mtj_params() -> DeviceParams:
+    # UMN MTJ model defaults (CoFeB/MgO, refs [5],[11]): Ms=1050 emu/cm^3,
+    # t_f=1.3nm, P=0.6, Delta ~ 45.
+    ms = 1050.0 * EMU_PER_CC_TO_A_PER_M
+    lz = 1.3e-9
+    volume = 45e-9 * 45e-9 * lz
+    b_aniso = 2.0 * 45.0 * KB * 300.0 / (ms * volume)
+    return DeviceParams(
+        ms=ms,
+        alpha=0.01,
+        polarization=0.6,
+        b_aniso=b_aniso,
+        b_exchange=0.0,
+        n_sublattices=1,
+        lz=lz,
+        tmr=1.0,                 # Table I: MTJ TMR 80-120% -> 100%
+    )
+
+
+AFMTJ_PARAMS: DeviceParams = _afmtj_params()
+MTJ_PARAMS: DeviceParams = _mtj_params()
+
+# Fig. 3 anchor points from the paper (voltage -> (write latency [s], energy [J]))
+PAPER_FIG3_AFMTJ: Tuple[Tuple[float, float, float], ...] = (
+    (1.0, 164e-12, 55.7e-15),
+)
+PAPER_FIG3_MTJ: Tuple[Tuple[float, float, float], ...] = (
+    (1.0, 1400e-12, 480e-15),
+)
+# "Switching latency drops from 65 ps at 0.5 V to 20 ps at 1.2 V" (intrinsic
+# sublattice reorientation time, excluding circuit RC):
+PAPER_INTRINSIC_SWITCH: Tuple[Tuple[float, float], ...] = ((0.5, 65e-12), (1.2, 20e-12))

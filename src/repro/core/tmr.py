@@ -1,0 +1,44 @@
+"""Tunneling magnetoresistance readout model (paper Sec. II, validation IIA).
+
+Conductance follows the Julliere-type angular form used by the UMN model,
+
+    G(theta) = G_P * (1 + cos(theta)) / 2 + G_AP * (1 - cos(theta)) / 2,
+
+where theta is the angle between the free-layer order parameter and the
+reference layer.  For the AFMTJ the role of the magnetization is played by
+the Neel vector (Shao & Tsymbal 2024: the momentum-resolved spin polarization
+of the AFM electrode tracks the Neel order), so the same expression applies
+with n_z in place of m_z.  TMR = (R_AP - R_P)/R_P; the paper validates ~80%
+against fabricated AFMTJs [13]-[15] (up to 500% theoretically [2]).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.llg import order_parameter_z
+from repro.core.params import DeviceParams
+
+
+def conductance_from_cos(cos_theta: jnp.ndarray, p: DeviceParams) -> jnp.ndarray:
+    g_p = 1.0 / p.r_parallel
+    g_ap = 1.0 / p.r_antiparallel
+    return 0.5 * (g_p + g_ap) + 0.5 * (g_p - g_ap) * cos_theta
+
+
+def conductance(m: jnp.ndarray, p: DeviceParams) -> jnp.ndarray:
+    """Instantaneous junction conductance [S] from the state (..., n_sub, 3)."""
+    return conductance_from_cos(order_parameter_z(m), p)
+
+
+def resistance(m: jnp.ndarray, p: DeviceParams) -> jnp.ndarray:
+    return 1.0 / conductance(m, p)
+
+
+def tmr_ratio(p: DeviceParams) -> float:
+    """(R_AP - R_P)/R_P as modeled — should equal p.tmr by construction."""
+    return (p.r_antiparallel - p.r_parallel) / p.r_parallel
+
+
+def read_margin(p: DeviceParams, v_read: float = 0.1) -> float:
+    """Sense current differential Delta_I = V (G_P - G_AP) at read voltage."""
+    return v_read * (1.0 / p.r_parallel - 1.0 / p.r_antiparallel)

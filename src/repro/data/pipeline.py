@@ -1,0 +1,87 @@
+"""Deterministic sharded data pipeline.
+
+Sources:
+  * synthetic — seeded zipfian token stream (offline container default);
+  * memmap    — packed uint16/uint32 token files (production path), sliced
+                per host so each data-parallel rank reads only its shard.
+
+Determinism contract: batch content is a pure function of (seed, step,
+host_rank) — restart-safe (checkpoint stores the step; resume regenerates
+the identical stream position) and elastic-safe (rank remapping reshuffles
+cleanly because rank enters the fold only through the slice offset).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    microbatches: int = 1
+    seed: int = 0
+    source: str = "synthetic"          # synthetic | memmap
+    path: Optional[str] = None         # token file for memmap
+    host_rank: int = 0
+    host_count: int = 1
+    frontend_positions: int = 0        # vlm/audio stub embeddings
+    d_model: int = 0
+    encoder_frames: bool = False
+
+
+def _zipf_tokens(rng: np.random.Generator, shape, vocab: int) -> np.ndarray:
+    """Zipf-ish distribution over the vocab (more LM-like than uniform)."""
+    u = rng.random(shape)
+    ranks = np.floor(np.exp(u * np.log(vocab))).astype(np.int64)
+    return np.clip(vocab - ranks, 0, vocab - 1).astype(np.int32)
+
+
+class _Memmap:
+    def __init__(self, path: str, vocab: int):
+        p = Path(path)
+        dtype = np.uint32 if vocab > 65535 else np.uint16
+        self.tokens = np.memmap(p, dtype=dtype, mode="r")
+
+    def slice(self, start: int, n: int) -> np.ndarray:
+        start = start % max(len(self.tokens) - n - 1, 1)
+        return np.asarray(self.tokens[start:start + n], dtype=np.int32)
+
+
+def make_pipeline(cfg: DataConfig) -> Iterator[Dict[str, np.ndarray]]:
+    """Yields batches shaped (microbatches, per_host_batch, seq_len)."""
+    assert cfg.global_batch % (cfg.host_count * cfg.microbatches) == 0
+    per_host = cfg.global_batch // cfg.host_count
+    per_mb = per_host // cfg.microbatches
+    mm = _Memmap(cfg.path, cfg.vocab) if cfg.source == "memmap" else None
+
+    step = 0
+    while True:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, cfg.host_rank])
+        )
+        shape = (cfg.microbatches, per_mb, cfg.seq_len + 1)
+        if mm is None:
+            toks = _zipf_tokens(rng, shape, cfg.vocab)
+        else:
+            n = int(np.prod(shape))
+            base = (cfg.seed + step * cfg.host_count + cfg.host_rank) * n
+            toks = mm.slice(base, n).reshape(shape)
+        batch = {
+            "tokens": toks[..., :-1],
+            "labels": toks[..., 1:],
+        }
+        if cfg.frontend_positions:
+            fe = rng.standard_normal(
+                (cfg.microbatches, per_mb, cfg.frontend_positions, cfg.d_model),
+                dtype=np.float32,
+            )
+            key = "encoder_frames" if cfg.encoder_frames else "frontend_embeds"
+            batch[key] = fe
+        yield batch
+        step += 1

@@ -1,0 +1,13 @@
+"""Hierarchical in-memory-computing architecture model (paper Sec. III/IV).
+
+  hierarchy — L1/L2/main-memory AFMTJ subarray organization (CHIME-style)
+  cpu_model — ARM Cortex-A72 analytical baseline (2 GHz, 32KB L1/1MB L2/8GB)
+  workloads — the paper's six kernels as op traces (bnn, img-grayscale,
+              img-threshold, mac, mat_add, rmse)
+  evaluate  — system-level latency/energy vs the CPU baseline (Fig. 4)
+  mapping   — beyond-paper: mapping LM-architecture inference onto the IMC
+"""
+from repro.imc.hierarchy import IMCHierarchy, build_hierarchy  # noqa: F401
+from repro.imc.cpu_model import CPUModel, CORTEX_A72  # noqa: F401
+from repro.imc.workloads import WORKLOADS, Workload  # noqa: F401
+from repro.imc.evaluate import evaluate_system, SystemResult  # noqa: F401

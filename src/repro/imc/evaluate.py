@@ -1,0 +1,86 @@
+"""System-level evaluation: IMC hierarchy vs CPU baseline (paper Fig. 4).
+
+Latency: the controller retires row-granular ops; each op processes
+``row_bits`` elements-worth of bits across the level's active subarrays in
+parallel.  Logic ops and write-backs pipeline (the paper: "a lightweight
+controller ... exploiting AFMTJ's picosecond switching for pipelined
+execution"), so per-stage time is max(logic, write) rather than the sum —
+with MTJs the slow writes dominate the pipe, with AFMTJs they hide.
+
+Energy: device energies per bit (from the circuit layer) + per-row-op
+peripheral energy (decoder/driver/controller) + CPU-side dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.imc.cpu_model import CORTEX_A72, CPUModel
+from repro.imc.hierarchy import IMCHierarchy, build_hierarchy
+from repro.imc.workloads import WORKLOADS, Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemResult:
+    workload: str
+    t_cpu: float
+    e_cpu: float
+    t_imc: float
+    e_imc: float
+
+    @property
+    def speedup(self) -> float:
+        return self.t_cpu / self.t_imc
+
+    @property
+    def energy_saving(self) -> float:
+        return self.e_cpu / self.e_imc
+
+
+def evaluate_workload(
+    w: Workload, hier: IMCHierarchy, cpu: CPUModel = CORTEX_A72
+) -> SystemResult:
+    t_cpu, e_cpu = cpu.kernel_time_energy(
+        w.n_elems,
+        w.cpu_instrs_per_elem,
+        w.cpu_simd_fraction,
+        w.cpu_bytes_per_elem,
+        w.footprint_bytes,
+    )
+
+    level = hier.level_for_footprint(w.footprint_bytes)
+    tm = level.timings
+    elems_per_op = level.row_bits / w.bits_per_elem  # row-parallel elements
+
+    n = w.n_elems / elems_per_op                     # row-op batches
+    t_logic = n * (w.logic2 * tm.t_logic2 + w.logic3 * tm.t_logic3
+                   + w.reads * tm.t_read)
+    t_write = n * w.writes * tm.t_write
+    # pipelined execution: logic (sense phase) overlaps write-back
+    t_imc = max(t_logic, t_write) + min(t_logic, t_write) * 0.1
+
+    # op counts are per *element*; each bit-serial op touches one bit-cell
+    # per element, so cell energy = n_elems * count * per-bit energy.
+    e_cells = w.n_elems * (
+        (w.logic2 + w.logic3) * tm.e_logic_bit
+        + w.writes * tm.e_write_bit
+        + w.reads * tm.e_read_bit
+    )
+    n_row_ops = n * (w.logic2 + w.logic3 + w.writes + w.reads)
+    e_periph = n_row_ops * level.spec.e_periph_row_op
+    e_imc = e_cells + e_periph
+
+    return SystemResult(w.name, t_cpu, e_cpu, t_imc, e_imc)
+
+
+def evaluate_system(kind: str = "afmtj", v_write: float = 1.0) -> Dict[str, SystemResult]:
+    hier = build_hierarchy(kind, v_write=v_write)
+    return {name: evaluate_workload(w, hier) for name, w in WORKLOADS.items()}
+
+
+def summarize(results: Dict[str, SystemResult]):
+    import statistics
+
+    sp = statistics.mean(r.speedup for r in results.values())
+    es = statistics.mean(r.energy_saving for r in results.values())
+    return sp, es

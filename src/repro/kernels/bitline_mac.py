@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: analog bit-line MAC (in-memory GEMV/GEMM) with ADC.
+
+Functional model of the paper's multi-row charge-sharing compute: activated
+word-lines drive read voltages V (batch, rows);每 column's bit-line sums the
+cell currents I = V @ G (G = per-cell conductance from the stored bit and
+the device TMR); a flash ADC quantizes the analog column current.
+
+Shaped as a tiled MXU matmul with an epilogue:
+  grid (M/BM, N/BN, K/BK); f32 VMEM accumulator scratch; on the last K step
+  the accumulator passes through the ADC model (clip + uniform quantize)
+  and is written out.  BM=BN=BK=128 keeps the MXU dims hardware-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = BN = BK = 128
+
+
+def _mac_kernel(v_ref, g_ref, o_ref, acc_ref, *, nk: int, adc_bits: int,
+                i_max: float):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        v_ref[...], g_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        i_bl = acc_ref[...]
+        if adc_bits > 0:
+            levels = float(2**adc_bits - 1)
+            x = jnp.clip(i_bl / i_max, 0.0, 1.0)
+            i_bl = jnp.round(x * levels) / levels * i_max
+        o_ref[...] = i_bl.astype(o_ref.dtype)
+
+
+def bitline_mac_pallas(
+    v: jnp.ndarray,               # (M, K) read voltages (batch x rows)
+    g: jnp.ndarray,               # (K, N) cell conductances (rows x cols)
+    adc_bits: int = 0,            # 0 = ideal (no quantization)
+    i_max: float = 1.0,           # ADC full-scale current
+    interpret: bool = False,
+) -> jnp.ndarray:
+    M, K = v.shape
+    K2, N = g.shape
+    assert K == K2 and M % BM == 0 and N % BN == 0 and K % BK == 0, (v.shape, g.shape)
+    from jax.experimental.pallas import tpu as pltpu
+
+    nk = K // BK
+    kern = functools.partial(_mac_kernel, nk=nk, adc_bits=adc_bits, i_max=i_max)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        grid=(M // BM, N // BN, nk),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+        interpret=interpret,
+    )(v, g)

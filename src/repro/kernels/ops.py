@@ -1,0 +1,59 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU —
+the BlockSpecs/grids are written for TPU VMEM tiling and validated on CPU
+via the interpreter against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import DeviceParams
+from repro.kernels.bitline_mac import bitline_mac_pallas
+from repro.kernels.llg_rk4 import CELL_TILE, ROWS, llg_rk4_pallas
+from repro.kernels.xnor_gemm import xnor_gemm_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# p is static: the kernel closes over the device constants at compile time
+@functools.partial(jax.jit, static_argnames=("p", "dt", "n_steps", "switch_threshold"))
+def llg_rk4(state, p: DeviceParams, dt: float, n_steps: int,
+            switch_threshold: float = 0.9):
+    """Advance a (8, cells) state block n_steps; see llg_rk4.py for layout."""
+    return llg_rk4_pallas(state, p, dt, n_steps, switch_threshold,
+                          interpret=_default_interpret())
+
+
+def pack_states(m0: jnp.ndarray, voltages: jnp.ndarray) -> jnp.ndarray:
+    """(cells, 2, 3) initial states + (cells,) drives -> (8, cells) SoA."""
+    cells = m0.shape[0]
+    pad = (-cells) % CELL_TILE
+    m0 = jnp.pad(m0, ((0, pad), (0, 0), (0, 0)))
+    voltages = jnp.pad(voltages, (0, pad))
+    rows = [m0[:, 0, 0], m0[:, 0, 1], m0[:, 0, 2],
+            m0[:, 1, 0], m0[:, 1, 1], m0[:, 1, 2],
+            voltages, jnp.zeros_like(voltages)]
+    return jnp.stack(rows).astype(jnp.float32)
+
+
+def unpack_states(state: jnp.ndarray, cells: int):
+    m = jnp.stack([state[0:3, :cells].T, state[3:6, :cells].T], axis=1)
+    crossing_step = state[7, :cells]
+    return m, crossing_step
+
+
+@functools.partial(jax.jit, static_argnames=("adc_bits", "i_max"))
+def bitline_mac(v, g, adc_bits: int = 0, i_max: float = 1.0):
+    return bitline_mac_pallas(v, g, adc_bits, i_max,
+                              interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("binarize",))
+def xnor_gemm(a, w, binarize: bool = False):
+    return xnor_gemm_pallas(a, w, binarize, interpret=_default_interpret())

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every kernel (the allclose targets in tests/).
+
+``ref_llg_rk4`` reuses the *production* physics from ``repro.core`` — the
+kernel must agree with the same code the device layer runs, not a private
+re-implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import llg, tmr
+from repro.core.integrator import rk4_step
+from repro.core.params import DeviceParams
+
+
+def ref_llg_rk4(
+    state: jnp.ndarray,           # (8, cells) SoA layout (see llg_rk4.py)
+    p: DeviceParams,
+    dt: float,
+    n_steps: int,
+    switch_threshold: float = 0.9,
+) -> jnp.ndarray:
+    cells = state.shape[1]
+    m = jnp.stack(
+        [state[0:3].T, state[3:6].T], axis=1
+    )                              # (cells, 2, 3)
+    v = state[6]
+
+    def body(carry, i):
+        m, crossed = carry
+        nz = llg.order_parameter_z(m)
+        g = tmr.conductance_from_cos(nz, p)
+        aj = p.stt_prefactor * v * g / p.area
+        m_next = rk4_step(lambda mm, tt: llg.llg_rhs(mm, p, aj, None), m, 0.0, dt)
+        nz_new = llg.order_parameter_z(m_next)
+        newly = (nz_new < -switch_threshold) & (crossed >= float(n_steps))
+        crossed = jnp.where(newly, (i + 1).astype(jnp.float32), crossed)
+        return (m_next, crossed), None
+
+    crossed0 = jnp.full((cells,), float(n_steps), jnp.float32)
+    (m, crossed), _ = jax.lax.scan(body, (m, crossed0), jnp.arange(n_steps))
+    return jnp.concatenate(
+        [m[:, 0, :].T, m[:, 1, :].T, v[None], crossed[None]], axis=0
+    )
+
+
+def ref_bitline_mac(v, g, adc_bits: int = 0, i_max: float = 1.0):
+    i_bl = v.astype(jnp.float32) @ g.astype(jnp.float32)
+    if adc_bits > 0:
+        levels = float(2**adc_bits - 1)
+        x = jnp.clip(i_bl / i_max, 0.0, 1.0)
+        i_bl = jnp.round(x * levels) / levels * i_max
+    return i_bl
+
+
+def ref_xnor_gemm(a, w, binarize: bool = False):
+    out = a.astype(jnp.float32) @ w.astype(jnp.float32)
+    if binarize:
+        out = jnp.where(out >= 0.0, 1.0, -1.0)
+    return out
+
+
+def ref_xnor_popcount(a_bits: jnp.ndarray, w_bits: jnp.ndarray):
+    """Bit-domain identity check: a,w in {0,1}; result == pm1 dot product."""
+    K = a_bits.shape[-1]
+    xnor = 1 - jnp.bitwise_xor(a_bits[:, None, :], w_bits.T[None, :, :])
+    pop = jnp.sum(xnor, axis=-1)
+    return 2 * pop - K

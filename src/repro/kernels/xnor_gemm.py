@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: XNOR-popcount GEMM (the paper's *bnn* workload).
+
+out[m, n] = sum_k xnor(a[m,k], w[k,n]) counted over +-1 encodings
+          = K - 2 * popcount(a XOR w)  ==  dot(a_pm1, w_pm1)
+
+The +-1 dot-product identity lets the MXU do the popcount: inputs are +-1
+(stored bf16), the accumulator is f32, and the epilogue optionally
+re-binarizes (sign) — exactly the functional behavior of the AFMTJ
+XNOR array + popcount tree modeled in repro.imc.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = BN = BK = 128
+
+
+def _xnor_kernel(a_ref, w_ref, o_ref, acc_ref, *, nk: int, binarize: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if binarize:
+            acc = jnp.where(acc >= 0.0, 1.0, -1.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def xnor_gemm_pallas(
+    a: jnp.ndarray,               # (M, K) in {-1, +1}
+    w: jnp.ndarray,               # (K, N) in {-1, +1}
+    binarize: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    M, K = a.shape
+    K2, N = w.shape
+    assert K == K2 and M % BM == 0 and N % BN == 0 and K % BK == 0
+    from jax.experimental.pallas import tpu as pltpu
+
+    nk = K // BK
+    kern = functools.partial(_xnor_kernel, nk=nk, binarize=binarize)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        grid=(M // BM, N // BN, nk),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+        interpret=interpret,
+    )(a, w)

@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this records, to results/dryrun/<arch>__<shape>__<mesh>.json:
+  * compiled.memory_analysis()  — bytes/device proof-of-fit
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline
+  * per-collective operand bytes parsed from the optimized (post-SPMD) HLO
+  * lowering + compile wall time
+
+Single-pod mesh = (data=16, model=16) = 256 chips; multi-pod = (pod=2, 16,
+16) = 512.  The run is resumable: existing JSONs are skipped unless
+--force.  See EXPERIMENTS.md §Dry-run for the result tables.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import LONG_CONTEXT_ARCHS, SHAPES, shape_for
+from repro.configs.registry import ARCHS, TRAIN_MICROBATCHES, get_arch
+from repro.launch import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "c64": 8, "c128": 16,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _line_bytes(lhs: str) -> int:
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(lhs):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * _DTYPE_BYTES[dt]
+    return nbytes
+
+
+def _split_computations(hlo_text: str):
+    comps, name, buf = {}, None, []
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER.match(line.strip()) if "{" in line else None
+        if m and ("->" in line or line.strip().startswith("ENTRY")):
+            if name is not None:
+                comps[name] = buf
+            name, buf = m.group(2), []
+            if m.group(1):
+                comps["__entry__"] = None
+                comps.setdefault("__entry_name__", name)
+        elif name is not None:
+            buf.append(line)
+    if name is not None:
+        comps[name] = buf
+    return comps
+
+
+def collective_bytes(hlo_text: str):
+    """Sum collective result bytes in the optimized HLO, multiplying ops
+    inside while bodies by their trip counts (XLA cost analysis visits loop
+    bodies once; our scan-over-layers / microbatch loops would otherwise be
+    undercounted by n_layers x microbatches)."""
+    comps = _split_computations(hlo_text)
+    entry = comps.pop("__entry_name__", None)
+    comps.pop("__entry__", None)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for line in comps.get(cond_name, [])
+                  for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    # per-computation raw collective tallies + nested whiles/calls
+    raw = {}
+    whiles = {}
+    calls = {}
+    call_re = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+    for cname, lines in comps.items():
+        tall = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+        subs, sub_calls = [], []
+        for line in lines or []:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                subs.append((wm.group(1), wm.group(2)))
+                continue
+            hit = False
+            for op in _COLLECTIVES:
+                if f" {op}(" in line or f" {op}-start(" in line:
+                    lhs = line.split(f" {op}")[0]
+                    tall[op]["count"] += 1
+                    tall[op]["bytes"] += _line_bytes(lhs)
+                    hit = True
+                    break
+            if not hit:
+                cm = call_re.search(line)
+                if cm:
+                    sub_calls.append(cm.group(1))
+        raw[cname] = tall
+        whiles[cname] = subs
+        calls[cname] = sub_calls
+
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+
+    def accumulate(cname: str, mult: int, depth=0):
+        if cname not in raw or depth > 12:
+            return
+        for op, t in raw[cname].items():
+            out[op]["count"] += t["count"] * mult
+            out[op]["bytes"] += t["bytes"] * mult
+        for cond, body in whiles[cname]:
+            accumulate(body, mult * trip_count(cond), depth + 1)
+        for sub in calls[cname]:
+            accumulate(sub, mult, depth + 1)
+
+    if entry:
+        accumulate(entry, 1)
+    else:  # fallback: flat count
+        for cname in raw:
+            accumulate(cname, 1)
+    return out
+
+
+def build_cell(arch_name: str, shape_name: str, multi_pod: bool):
+    cfg = get_arch(arch_name)
+    mb = TRAIN_MICROBATCHES[arch_name] if shape_name == "train_4k" else None
+    if os.environ.get("REPRO_TRAIN_MICROBATCHES") and shape_name == "train_4k":
+        mb = int(os.environ["REPRO_TRAIN_MICROBATCHES"])
+    shape = shape_for(cfg, shape_name, microbatches=mb)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    SH.activation_policy(mesh, cfg, shape)
+
+    aparams = M.abstract_params(cfg)
+    axes = M.logical_axes(cfg)
+    p_shard = SH.param_shardings(cfg, mesh, axes, aparams, kind=shape.kind)
+    batch = ST.input_specs(cfg, shape)
+    b_shard = SH.batch_shardings(mesh, shape, batch)
+
+    if shape.kind == "train":
+        step_fn = ST.make_train_step(cfg, shape, param_shardings=p_shard)
+        m_shard = p_shard
+        scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        astep = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, m_shard, m_shard, scalar, b_shard),
+            out_shardings=(p_shard, m_shard, m_shard, scalar, None),
+            donate_argnums=(0, 1, 2),
+        )
+        aopt = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, jax.numpy.dtype(cfg.opt_state_dtype)),
+            aparams)
+        args = (aparams, aopt, aopt, astep, batch)
+    elif shape.kind == "prefill":
+        step_fn = ST.make_prefill_step(cfg, shape)
+        acache = ST.abstract_cache(cfg, shape)
+        c_shard = SH.cache_shardings(mesh, cfg, shape, acache)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(None, c_shard),
+        )
+        args = (aparams, batch)
+    else:  # decode
+        step_fn = ST.make_decode_step(cfg, shape)
+        acache = ST.abstract_cache(cfg, shape)
+        c_shard = SH.cache_shardings(mesh, cfg, shape, acache)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, c_shard, b_shard["tokens"]),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        )
+        args = (aparams, acache, batch["tokens"])
+    return cfg, shape, mesh, jitted, step_fn, args
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, verbose=True):
+    t0 = time.time()
+    cfg, shape, mesh, jitted, step_fn, args = build_cell(arch_name, shape_name, multi_pod)
+    from repro.launch.flops_audit import audit_step_flops
+
+    flops_global = audit_step_flops(step_fn, *args)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_d[f] = getattr(mem, f, None)
+    if verbose:
+        print(f"  memory_analysis: {mem_d}")
+    cost = compiled.cost_analysis()
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float)) and k in
+              ("flops", "bytes accessed", "transcendentals",
+               "bytes accessed output", "utilization operand 0")}
+    if verbose:
+        print(f"  cost_analysis: flops={cost_d.get('flops'):.3e} "
+              f"bytes={cost_d.get('bytes accessed'):.3e}")
+    coll = collective_bytes(compiled.as_text())
+
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "multipod_2x16x16" if multi_pod else "pod_16x16",
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "microbatches": shape.microbatches,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "flops_audit_global": flops_global,
+        "flops_audit_per_device": flops_global / n_dev,
+        "memory": mem_d,
+        "cost": cost_d,
+        "collectives": coll,
+        "t_lower_s": t_lower,
+        "t_compile_s": t_compile,
+    }
+    return result
+
+
+def cells(multi_pod: bool):
+    for a in ARCHS:
+        for s in SHAPES:
+            if s == "long_500k" and a not in LONG_CONTEXT_ARCHS:
+                continue  # sanctioned skip: pure full-attention archs
+            yield a, s, multi_pod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    todo = []
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        for mp in meshes:
+            todo += list(cells(mp))
+    else:
+        assert args.arch and args.shape
+        todo = [(args.arch, args.shape, mp) for mp in meshes]
+
+    failures = []
+    for arch, shp, mp in todo:
+        tag = f"{arch}__{shp}__{'multipod' if mp else 'pod'}"
+        out = RESULTS / f"{tag}.json"
+        if out.exists() and not args.force:
+            print(f"[skip] {tag}")
+            continue
+        print(f"[run ] {tag}", flush=True)
+        try:
+            res = run_cell(arch, shp, mp)
+            out.write_text(json.dumps(res, indent=1))
+            print(f"[ ok ] {tag}  lower={res['t_lower_s']:.1f}s "
+                  f"compile={res['t_compile_s']:.1f}s", flush=True)
+        except Exception as e:
+            failures.append((tag, repr(e)))
+            (RESULTS / f"{tag}.FAILED").write_text(traceback.format_exc())
+            print(f"[FAIL] {tag}: {e}", flush=True)
+
+    print(f"\ndone; {len(failures)} failures")
+    for tag, e in failures:
+        print(f"  {tag}: {e[:200]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state — required for the dry-run's
+``xla_force_host_platform_device_count`` trick to work, and for smoke tests
+to keep seeing a single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: (data=16, model=16) = 256 chips; multi-pod adds a
+    leading pod axis (2 pods = 512 chips) for cross-pod data parallelism."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1):
+    """Debug mesh over whatever devices exist (tests use 1-8 host devices)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The axes that act as data parallel (pod folded into data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,139 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh:
+
+  compute term    = per-device HLO FLOPs / 197 TFLOP/s       (v5e bf16 peak)
+  memory term     = per-device HLO bytes / 819 GB/s          (HBM BW)
+  collective term = per-device collective bytes / 50 GB/s    (ICI per link)
+
+``cost_analysis()`` on the SPMD-partitioned module reports *per-device*
+FLOPs/bytes; collective bytes are summed from the optimized HLO's collective
+result shapes (per-device traffic through the ring).  MODEL_FLOPS uses
+6*N_active*D for training and 2*N_active*D for inference steps; the ratio
+MODEL/HLO exposes remat + dispatch overhead.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline           # table to stdout
+  PYTHONPATH=src python -m repro.launch.roofline --md results/roofline.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, get_arch
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    cfg = get_arch(arch)
+    s = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if s.kind == "train":
+        tokens = s.global_batch * s.seq_len
+        total = 6.0 * n * tokens
+    elif s.kind == "prefill":
+        tokens = s.global_batch * s.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * s.global_batch
+    return total / n_devices
+
+
+def load_cells(mesh: str = "pod") -> List[Dict]:
+    out = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def analyze(cell: Dict) -> Dict:
+    # jaxpr-audited flops (exact scan trip counts); raw cost_analysis flops
+    # kept in the JSON for reference (XLA visits while bodies once).
+    flops = cell.get("flops_audit_per_device") or cell["cost"]["flops"]
+    byts = cell["cost"]["bytes accessed"]
+    coll = sum(v["bytes"] for v in cell["collectives"].values())
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(cell["arch"], cell["shape"], cell["n_devices"])
+    bound = max(t_c, t_m, t_x)
+    # roofline fraction: useful model FLOPs per device over what the chip
+    # could have done in the bound time (the MFU-analog for a dry run)
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        **cell,
+        "t_compute": t_c,
+        "t_memory": t_m,
+        "t_collective": t_x,
+        "dominant": dom,
+        "model_flops_dev": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_frac": frac,
+        "coll_bytes": coll,
+    }
+
+
+def fmt_table(cells: List[Dict]) -> str:
+    rows = [
+        "| arch | shape | Tcomp (ms) | Tmem (ms) | Tcoll (ms) | dominant | "
+        "MODEL/HLO | roofline frac | bytes/dev (GB) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {k: i for i, k in enumerate(ARCHS)}
+    cells = sorted(cells, key=lambda c: (order.get(c["arch"], 99), c["shape"]))
+    for c in cells:
+        mem_gb = (c["memory"]["argument_size_in_bytes"]
+                  + c["memory"]["temp_size_in_bytes"]) / 1e9
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['t_compute']*1e3:.3f} | "
+            f"{c['t_memory']*1e3:.3f} | {c['t_collective']*1e3:.3f} | "
+            f"{c['dominant']} | {c['useful_ratio']:.2f} | "
+            f"{c['roofline_frac']*100:.1f}% | {mem_gb:.2f} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb(cells: List[Dict]) -> Dict[str, Dict]:
+    """worst roofline fraction / most collective-bound / most representative
+    (largest simulated-system training cell — the paper-technique host)."""
+    train = [c for c in cells if c["kind"] == "train"]
+    worst = min(cells, key=lambda c: c["roofline_frac"])
+    coll = max(cells, key=lambda c: c["t_collective"] /
+               max(c["t_compute"], c["t_memory"], 1e-12))
+    rep = max(train, key=lambda c: c["params_total"])
+    return {"worst_fraction": worst, "most_collective": coll,
+            "representative": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    cells = [analyze(c) for c in load_cells(args.mesh)]
+    table = fmt_table(cells)
+    picks = pick_hillclimb(cells)
+    lines = [f"## Roofline ({args.mesh} mesh, {cells[0]['n_devices']} chips)",
+             "", table, "", "### Hillclimb picks", ""]
+    for k, c in picks.items():
+        lines.append(f"- **{k}**: {c['arch']} x {c['shape']} "
+                     f"(frac {c['roofline_frac']*100:.1f}%, dominant "
+                     f"{c['dominant']})")
+    text = "\n".join(lines)
+    print(text)
+    if args.md:
+        Path(args.md).write_text(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Sharding rules: logical parameter/activation axes -> mesh axes.
+
+MaxText-style rules table + divisibility-aware resolution: a logical axis
+maps to its mesh axes only when the dimension divides evenly (otherwise that
+axis is dropped for the tensor — e.g. seamless's vocab 256206 stays
+replicated over `model`), so every arch lowers on every mesh without uneven
+-sharding surprises.
+
+Two parameter policies:
+  tp    — weights sharded over `model` only (small archs; params fit HBM)
+  fsdp  — weights *also* sharded over `data` on the embed axis (ZeRO-3-ish;
+          GSPMD inserts per-layer all-gathers inside the scan) — required
+          for >=8B archs, and what makes 400B params fit 256 chips.
+Optimizer moments always shard exactly like their parameter.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import sharding_hooks
+
+import os
+
+FSDP_ARCHS = (
+    "internlm2-20b",
+    "qwen3-8b",
+    "llama4-maverick-400b-a17b",
+    "jamba-1.5-large-398b",
+)
+
+# ---- perf-experiment knobs (EXPERIMENTS.md §Perf) --------------------------
+# REPRO_ATTN_DP_ARCHS: csv of archs whose attention projections go
+#   data-parallel (replicated weights).  Fixes the heads%tp!=0 pathology
+#   (qwen2-0.5b: 14 heads over 16-way TP all-reduces full score chunks).
+# REPRO_SERVE_WEIGHT_AXES: "2d" (default; embed over data for FSDP archs)
+#   or "tp" (serve-time weights TP-only — no per-token weight gathers).
+def _attn_dp_archs() -> Tuple[str, ...]:
+    return tuple(x for x in os.environ.get("REPRO_ATTN_DP_ARCHS", "").split(",") if x)
+
+
+def _full_dp_archs() -> Tuple[str, ...]:
+    # REPRO_FULL_DP_ARCHS: pure data parallelism (all weights replicated) —
+    # the right layout for sub-1B models where TP collectives dwarf compute.
+    return tuple(x for x in os.environ.get("REPRO_FULL_DP_ARCHS", "").split(",") if x)
+
+
+def param_rules(cfg: ArchConfig, mesh: Mesh, kind: str = "train") -> Dict[str, Tuple[str, ...]]:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    fsdp = cfg.name in FSDP_ARCHS or cfg.name.startswith(tuple(FSDP_ARCHS))
+    if kind != "train" and os.environ.get("REPRO_SERVE_WEIGHT_AXES") == "tp":
+        fsdp = False
+    emb = dp if fsdp else ()
+    attn_spec = () if cfg.name in _attn_dp_archs() else ("model",)
+    if cfg.name in _full_dp_archs():
+        return {k: () for k in ("vocab", "embed", "q_proj", "kv_proj", "heads",
+                                "ffn", "experts", "expert_ffn", "layers", "conv")}
+    return {
+        "vocab": ("model",),
+        "embed": emb,              # fsdp: ZeRO-shard the embed dim over data
+        "q_proj": attn_spec,
+        "kv_proj": attn_spec,
+        "heads": ("model",),
+        "ffn": ("model",),
+        "experts": ("model",),     # expert parallelism
+        "expert_ffn": dp,          # REPRO_MOE_2D: expert f-dim over data —
+                                   # 2D expert sharding, no FSDP weight gathers
+        "layers": (),              # scan axis — never sharded
+        "conv": (),
+    }
+
+
+def resolve_pspec(
+    shape: Tuple[int, ...],
+    axes: Tuple[Optional[str], ...],
+    rules: Dict[str, Tuple[str, ...]],
+    mesh: Mesh,
+) -> P:
+    """Map logical axes to mesh axes, dropping any that don't divide evenly
+    or that are already used by another dim of the same tensor."""
+    used: set = set()
+    out = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, ax in zip(shape, axes):
+        spec: Tuple[str, ...] = ()
+        if ax is not None:
+            cand = tuple(a for a in rules.get(ax, ()) if a not in used)
+            total = int(np.prod([sizes[a] for a in cand])) if cand else 1
+            if cand and dim % total == 0:
+                spec = cand
+                used.update(cand)
+        out.append(spec if len(spec) != 1 else spec[0])
+    out = [s if s != () else None for s in out]
+    return P(*out)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, specs_axes: Any, specs_shapes: Any,
+                    kind: str = "train"):
+    """NamedSharding pytree for the parameter tree (and its moments)."""
+    rules = param_rules(cfg, mesh, kind)
+
+    def mk(axes, sds):
+        return NamedSharding(mesh, resolve_pspec(sds.shape, axes, rules, mesh))
+
+    return jax.tree_util.tree_map(
+        mk, specs_axes, specs_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+# --------------------------------------------------------------------------
+# activations
+# --------------------------------------------------------------------------
+def activation_policy(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig):
+    """Install the with_sharding_constraint policy used inside model code."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    seq_sharded = shape.name == "long_500k"          # batch=1: shard sequence
+
+    def policy(x, kind: str):
+        if kind == "act_btd":
+            if seq_sharded:
+                # long_500k decodes one token (B=1, S=1): constraining the
+                # activation to a seq-sharded spec makes GSPMD gather weights
+                # instead of all-reducing tiny partial activations (measured
+                # 7 GB/token on jamba; §Perf iteration).  Leave activations
+                # unconstrained; the 500k KV cache keeps its seq sharding.
+                return x
+            spec = P(dp, None, None)
+        elif kind == "logits":
+            spec = P(dp, None, "model")
+        elif kind == "decode_scores" and seq_sharded:
+            # (B, kvh, g, 1, Skv): partial attention over the seq-sharded KV
+            spec = P(None, None, None, None, dp)
+        elif kind == "cache_kv" and seq_sharded:
+            spec = P(None, dp, None, None)   # per-layer (B, S, kvh, hd)
+        else:
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        except ValueError:
+            return x
+
+    sharding_hooks.set_policy(policy)
+
+
+def batch_shardings(mesh: Mesh, shape: ShapeConfig, batch_tree: Any):
+    """Shardings for input batches: batch dim over data axes (replicated when
+    the batch doesn't divide, e.g. long_500k's global_batch=1)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_total = int(np.prod([sizes[a] for a in dp]))
+
+    def mk(x):
+        nd = len(x.shape)
+        bdim = 1 if (shape.kind == "train" and nd >= 2) else 0
+        spec = [None] * nd
+        if x.shape[bdim] % dp_total == 0:
+            spec[bdim] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(mk, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cfg: ArchConfig, shape: ShapeConfig, cache: Any):
+    """Decode-cache shardings.
+
+    decode_32k: batch over data, head_dim (attn) / heads (ssm) over model.
+    long_500k (batch=1): KV sequence over data — the 500k cache is the
+    dominant tensor and must not be replicated 16x.
+    """
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = sizes.get("model", 1)
+    long_ctx = shape.name == "long_500k"
+
+    def mk(path, x):
+        nd = len(x.shape)
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        if key in ("k", "v") and nd == 5:           # (layers, B, S, H, D)
+            if long_ctx:
+                spec = [None, None, dp, None, None]
+            else:
+                spec = [None, dp, None, None,
+                        "model" if x.shape[4] % model_n == 0 else None]
+            return NamedSharding(mesh, P(*spec))
+        if key == "ssm" and nd == 5:                 # (layers, B, H, P, N)
+            spec = [None, None if long_ctx else dp,
+                    "model" if x.shape[2] % model_n == 0 else None, None, None]
+            return NamedSharding(mesh, P(*spec))
+        if key == "conv" and nd == 4:                # (layers, B, K-1, C)
+            spec = [None, None if long_ctx else dp, None,
+                    "model" if x.shape[3] % model_n == 0 else None]
+            return NamedSharding(mesh, P(*spec))
+        if nd == 5:                                  # cross K/V (layers,B,S,H,D)
+            return NamedSharding(
+                mesh, P(None, dp, None, None,
+                        "model" if x.shape[4] % model_n == 0 else None))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(mk, cache)

@@ -1,0 +1,133 @@
+"""Step builders shared by the dry-run, the trainer and the server.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+dry-run lowers against these; the trainer/server feed real arrays of the
+same shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_update, wsd_schedule
+
+
+def _text_len(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    if cfg.n_encoder_layers:
+        return shape.seq_len
+    return shape.seq_len - cfg.frontend_positions
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract input batch for the given (arch, shape) cell."""
+    B = shape.global_batch
+    S = _text_len(cfg, shape)
+    F = cfg.frontend_positions
+    i32 = jnp.int32
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    if shape.kind == "train":
+        mb = shape.microbatches
+        assert B % mb == 0, (B, mb)
+        Bm = B // mb
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((mb, Bm, S), i32),
+            "labels": jax.ShapeDtypeStruct((mb, Bm, S), i32),
+        }
+        if F and not cfg.n_encoder_layers:
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct((mb, Bm, F, cfg.d_model), cdt)
+        if cfg.n_encoder_layers:
+            batch["encoder_frames"] = jax.ShapeDtypeStruct((mb, Bm, F, cfg.d_model), cdt)
+        return batch
+
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if F and not cfg.n_encoder_layers:
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct((B, F, cfg.d_model), cdt)
+        if cfg.n_encoder_layers:
+            batch["encoder_frames"] = jax.ShapeDtypeStruct((B, F, cfg.d_model), cdt)
+        return batch
+
+    # decode: one new token against a full KV/SSM cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def make_train_step(cfg: ArchConfig, shape: ShapeConfig,
+                    opt: AdamWConfig = AdamWConfig(), total_steps: int = 10000,
+                    param_shardings=None):
+    """(params, m, v, step, batch) -> (params, m, v, step, metrics).
+
+    Microbatched gradient accumulation via lax.scan when
+    shape.microbatches > 1; accumulation dtype = cfg.opt_state_dtype
+    (bf16 for the big-MoE archs, fp32 otherwise).
+
+    ``param_shardings`` pins the grad-accumulation scan carry to the
+    parameter sharding — without it GSPMD may leave the carry replicated and
+    emit a full-size grad all-reduce per microbatch (measured 2.5 TB/device
+    per step on llama4 train_4k; see EXPERIMENTS.md §Perf iteration 1).
+    """
+    n_micro = shape.microbatches
+
+    def loss_fn(params, mb):
+        loss, metrics = M.forward_train(params, cfg, mb)
+        return loss, metrics
+
+    def _pin(tree):
+        if param_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, tree, param_shardings)
+
+    def train_step(params, m, v, step, batch):
+        if n_micro == 1:
+            mb = jax.tree_util.tree_map(lambda x: x[0], batch)
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            grads = _pin(grads)
+        else:
+            acc_dt = jnp.dtype(cfg.opt_state_dtype)
+            g0 = _pin(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params))
+
+            def body(g_acc, mb):
+                (l, mt), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = _pin(jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g))
+                return g_acc, l
+
+            grads, losses = jax.lax.scan(body, g0, batch)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            loss = jnp.mean(losses)
+            metrics = {}
+        lr = wsd_schedule(step, opt.lr, total=total_steps)
+        params, m, v, gn = adamw_update(params, grads, m, v, step, opt, lr)
+        out_metrics = {"loss": loss, "grad_norm": gn, "lr": lr}
+        return params, m, v, step + 1, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeConfig):
+    def prefill(params, batch):
+        return M.serve_prefill(params, cfg, batch, max_seq=shape.seq_len)
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, shape: ShapeConfig):
+    def decode(params, cache, tokens):
+        return M.serve_step(params, cfg, cache, tokens)
+
+    return decode

@@ -1,0 +1,153 @@
+"""Training driver: ``python -m repro.launch.train --arch qwen2-0.5b --preset smoke``.
+
+Presets:
+  smoke  — reduced config, tiny batch, runs on this CPU container in minutes
+  full   — the arch's real config at the production mesh (TPU pod)
+
+Wires together every substrate: config registry -> model -> sharding rules ->
+data pipeline -> AdamW -> fault-tolerant loop (checkpoint/resume, SIGTERM
+preemption save, straggler watchdog).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_arch, smoke_config
+from repro.data import DataConfig, make_pipeline
+from repro.launch import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import FaultTolerantLoop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--save-every", type=int, default=25)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    if args.preset == "smoke":
+        cfg = smoke_config(args.arch)
+        mesh = make_local_mesh()
+        shape = ShapeConfig("custom", "train", args.seq, args.batch,
+                            microbatches=args.microbatches)
+    else:
+        cfg = get_arch(args.arch)
+        mesh = make_production_mesh()
+        shape = ShapeConfig("train_4k", "train", 4096, 256,
+                            microbatches=args.microbatches)
+
+    SH.activation_policy(mesh, cfg, shape)
+    aparams = M.abstract_params(cfg)
+    axes = M.logical_axes(cfg)
+    p_shard = SH.param_shardings(cfg, mesh, axes, aparams)
+
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"active={cfg.active_param_count()/1e6:.1f}M mesh={mesh.devices.shape}")
+
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    params = jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), params, p_shard)
+    m, v = adamw_init(params, cfg.opt_state_dtype)
+    step0 = jnp.zeros((), jnp.int32)
+
+    opt_cfg = AdamWConfig(lr=args.lr)
+    train_step = ST.make_train_step(cfg, shape, opt_cfg, total_steps=args.steps)
+    batch_spec = ST.input_specs(cfg, shape)
+    b_shard = SH.batch_shardings(mesh, shape, batch_spec)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_shard, p_shard, p_shard, None, b_shard),
+        out_shardings=(p_shard, p_shard, p_shard, None, None),
+        donate_argnums=(0, 1, 2),
+    )
+
+    data_cfg = DataConfig(
+        vocab=cfg.vocab, seq_len=shape.seq_len if not cfg.frontend_positions
+        or cfg.n_encoder_layers else shape.seq_len - cfg.frontend_positions,
+        global_batch=shape.global_batch, microbatches=shape.microbatches,
+        frontend_positions=cfg.frontend_positions, d_model=cfg.d_model,
+        encoder_frames=bool(cfg.n_encoder_layers),
+    )
+    pipeline = make_pipeline(data_cfg)
+
+    ckpt = Checkpointer(Path(args.ckpt_dir) / cfg.name)
+    loop = FaultTolerantLoop(ckpt, save_every=args.save_every)
+    loop.install_sigterm()
+
+    # resume if a checkpoint exists
+    latest = ckpt.latest_step()
+    start = 0
+    if latest is not None:
+        state_like = {"params": params, "m": m, "v": v,
+                      "step": jnp.zeros((), jnp.int32)}
+        restored = ckpt.restore(latest, state_like)
+        params, m, v, step0 = (restored["params"], restored["m"],
+                               restored["v"], restored["step"])
+        start = latest
+        print(f"resumed from checkpoint step {latest}")
+
+    history = []
+
+    def step_fn(state, batch):
+        params, m, v, step = state
+        batch = jax.tree_util.tree_map(jnp.asarray, batch)
+        params, m, v, step, metrics = jitted(params, m, v, step, batch)
+        return (params, m, v, step), metrics
+
+    def get_batch(_):
+        return next(pipeline)
+
+    def log(step, metrics, dt):
+        if step % args.log_every == 0 or metrics.get("straggler"):
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+            print(f"step {step:5d} loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms"
+                  + (" STRAGGLER" if metrics.get("straggler") else ""))
+
+    t0 = time.time()
+    state = (params, m, v, step0)
+
+    # adapt to FaultTolerantLoop's (state, tree) checkpoint format
+    class _StateCkpt:
+        def save(self, step, state, blocking=False):
+            params, m, v, s = state
+            ckpt.save(step, {"params": params, "m": m, "v": v, "step": s},
+                      blocking=blocking)
+
+        def wait(self):
+            ckpt.wait()
+
+    loop.ckpt = _StateCkpt()
+    state, final_step, watchdog = loop.run(
+        state, step_fn, get_batch, start, args.steps, log)
+    print(f"trained to step {final_step} in {time.time()-t0:.1f}s; "
+          f"stragglers={len(watchdog.straggler_steps)}")
+    if len(history) >= 2:
+        print(f"loss: {history[0][1]:.4f} -> {history[-1][1]:.4f}")
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures as pattern-scanned pure functions."""
+from repro.models.model import (  # noqa: F401
+    abstract_params,
+    forward_train,
+    init_cache,
+    init_params,
+    logical_axes,
+    param_specs,
+    serve_prefill,
+    serve_step,
+)

@@ -1,0 +1,130 @@
+"""Model substrate: parameter specs, norms, rotary embeddings, activations.
+
+Parameter handling is spec-first (MaxText-style logical axes):
+
+  * each model defines ``param_specs(cfg) -> pytree[ParamSpec]``
+  * ``init_params``     — concrete arrays (smoke tests / real training)
+  * ``abstract_params`` — ShapeDtypeStructs (dry-run lowering: no allocation)
+  * ``logical_axes``    — pytree of logical-axis tuples; the sharding rules
+                          table (launch/sharding.py) maps these to mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis names
+    init: str = "normal"                  # normal | zeros | ones | embed
+    dtype: Optional[str] = None           # override cfg.param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: Any, cfg: ArchConfig, key: jax.Array) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_leaf_is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(spec: ParamSpec, k):
+        dtype = jnp.dtype(spec.dtype or cfg.param_dtype)
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+        if spec.init == "embed":
+            # N(0, 1/d): inputs are rescaled by sqrt(d) at lookup, and tied
+            # unembedding then yields O(1) logits at init (Gemma scheme).
+            scale = 1.0 / jnp.sqrt(spec.shape[-1])
+        else:
+            scale = 1.0 / jnp.sqrt(fan_in)
+        return (jax.random.normal(k, spec.shape) * scale).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs: Any, cfg: ArchConfig) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or cfg.param_dtype)),
+        specs,
+        is_leaf=_leaf_is_spec,
+    )
+
+
+def logical_axes(specs: Any) -> Any:
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=_leaf_is_spec)
+
+
+# --------------------------------------------------------------------------
+# numerics
+# --------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# --------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head // 2, dtype=jnp.float32) / (d_head // 2)))
+
+
+def apply_rope(
+    x: jnp.ndarray,               # (B, S, H, D)
+    positions: jnp.ndarray,       # (B, S) or (3, B, S) for M-RoPE
+    theta: float,
+    mrope_sections: Optional[Tuple[int, int, int]] = None,
+) -> jnp.ndarray:
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    if mrope_sections is None:
+        if positions.ndim == 3:
+            positions = positions[0]
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    else:
+        # M-RoPE: frequency dims split into (temporal, height, width)
+        # sections, each rotated by its own position stream.
+        if positions.ndim == 2:
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        parts = []
+        start = 0
+        for sec, pos in zip(mrope_sections, positions):
+            parts.append(pos[..., None].astype(jnp.float32) * freqs[start:start + sec])
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)       # (B,S,D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (B,S,1,D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,116 @@
+"""Feed-forward layers: gated dense (SwiGLU/GeGLU) and Mixture-of-Experts.
+
+MoE is GShard-style grouped dispatch with capacity factor — the
+TPU-canonical dropless-ish formulation: tokens are grouped, each group
+computes a (Tg, E, C) one-hot combine tensor via a position-in-expert
+cumsum, and dispatch/return are einsums that GSPMD turns into all-to-alls
+when experts are sharded over the `model` mesh axis (expert parallelism).
+Aux losses (Switch load-balance + router z-loss) are returned to the
+training loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamSpec, act_fn
+
+MOE_GROUP = 1024          # tokens per dispatch group
+CAPACITY_FACTOR = 1.25
+
+
+def dense_ffn_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "ffn")),
+        "w_up": ParamSpec((d, f), ("embed", "ffn")),
+        "w_down": ParamSpec((f, d), ("ffn", "embed")),
+    }
+
+
+def dense_ffn(p, x, cfg: ArchConfig):
+    g = act_fn(x @ p["w_gate"].astype(x.dtype), cfg.act)
+    u = x @ p["w_up"].astype(x.dtype)
+    return (g * u) @ p["w_down"].astype(x.dtype)
+
+
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    assert cfg.moe is not None
+    import os
+
+    d, e, f = cfg.d_model, cfg.moe.num_experts, cfg.moe.d_expert
+    # REPRO_MOE_2D: shard the expert hidden dim over `data` instead of
+    # ZeRO-gathering expert weights (perf knob; EXPERIMENTS.md §Perf).
+    fax = "expert_ffn" if os.environ.get("REPRO_MOE_2D") else "ffn"
+    emb = None if os.environ.get("REPRO_MOE_2D") else "embed"
+    sp = {
+        "router": ParamSpec((d, e), ("embed", "experts"), dtype="float32"),
+        "w_gate": ParamSpec((e, d, f), ("experts", emb, fax)),
+        "w_up": ParamSpec((e, d, f), ("experts", emb, fax)),
+        "w_down": ParamSpec((e, f, d), ("experts", fax, emb)),
+    }
+    if cfg.moe.shared_expert:
+        sp["shared"] = {
+            "w_gate": ParamSpec((d, f), ("embed", "ffn")),
+            "w_up": ParamSpec((d, f), ("embed", "ffn")),
+            "w_down": ParamSpec((f, d), ("ffn", "embed")),
+        }
+    return sp
+
+
+def moe_ffn(p, x, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output, aux_loss).  x: (B, S, d)."""
+    B, S, d = x.shape
+    e = cfg.moe.num_experts
+    k = cfg.moe.top_k
+    tg = min(MOE_GROUP, B * S)
+    assert (B * S) % tg == 0, (B, S, tg)
+    G = (B * S) // tg
+    if tg <= 64:
+        cap = tg * k            # tiny groups (decode/smoke): fully dropless
+    else:
+        cap = max(4, int(tg * k * CAPACITY_FACTOR / e))
+
+    xt = x.reshape(G, tg, d)
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k selection -> per-token (expert, gate) pairs
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                     # (G,Tg,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # position-in-expert via cumsum over the flattened (token, k) choices
+    sel = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)              # (G,Tg,k,E)
+    sel_flat = sel.reshape(G, tg * k, e)
+    pos = jnp.cumsum(sel_flat, axis=1) - sel_flat                       # (G,Tg*k,E)
+    pos = jnp.sum(pos * sel_flat, axis=-1).reshape(G, tg, k)            # (G,Tg,k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    # combine[g,t,e,c] = gate for token t's slot c of expert e
+    combine = jnp.einsum("gtke,gtkc->gtec", sel, pos_oh * gate_vals[..., None])
+    dispatch = (combine > 0.0).astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->egcd", dispatch, xt)                     # (E,G,C,d)
+    h_g = act_fn(jnp.einsum("egcd,edf->egcf", xe, p["w_gate"].astype(x.dtype)), cfg.act)
+    h_u = jnp.einsum("egcd,edf->egcf", xe, p["w_up"].astype(x.dtype))
+    ye = jnp.einsum("egcf,efd->egcd", h_g * h_u, p["w_down"].astype(x.dtype))
+    y = jnp.einsum("egcd,gtec->gtd", ye, combine.astype(x.dtype))
+    y = y.reshape(B, S, d)
+
+    # Switch load-balance loss + router z-loss
+    me = jnp.mean(probs, axis=1)                                        # (G,E)
+    ce = jnp.mean(sel.sum(axis=2), axis=1)                              # (G,E)
+    lb = e * jnp.mean(jnp.sum(me * ce, axis=-1))
+    zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = 0.01 * lb + 0.001 * zl
+
+    if cfg.moe.shared_expert:
+        y = y + dense_ffn(p["shared"], x, cfg)
+    return y, aux

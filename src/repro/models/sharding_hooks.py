@@ -1,0 +1,25 @@
+"""Pluggable activation-sharding hooks.
+
+Models call ``constrain(x, kind)`` at layer boundaries; by default this is a
+no-op (single-device smoke tests).  The launcher installs a policy that maps
+``kind`` to a PartitionSpec under the active mesh (GSPMD constraint points).
+Keeping the hook here avoids a models -> launch dependency.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+_POLICY: Optional[Callable[[jnp.ndarray, str], jnp.ndarray]] = None
+
+
+def set_policy(fn: Optional[Callable[[jnp.ndarray, str], jnp.ndarray]]) -> None:
+    global _POLICY
+    _POLICY = fn
+
+
+def constrain(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if _POLICY is None:
+        return x
+    return _POLICY(x, kind)

@@ -1,0 +1,177 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk quadratic
+(attention-like) term + inter-chunk recurrent state passing via lax.scan —
+O(L·Q) work, O(L/Q) sequential steps, MXU-friendly einsums throughout.
+Decode is the O(1) recurrence on the (H, P, N) state.
+
+ngroups = 1 (B/C shared across heads), depthwise causal conv(4) over the
+[x, B, C] bundle, gated RMSNorm before out-projection — faithful to the
+reference Mamba-2 block.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamSpec, rms_norm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.headdim
+    return d_in, n_heads, s.headdim, s.d_state, s.d_conv
+
+
+def mamba_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_in, H, P, N, K = _dims(cfg)
+    conv_ch = d_in + 2 * N
+    return {
+        "w_z": ParamSpec((d, d_in), ("embed", "ffn")),
+        "w_xbc": ParamSpec((d, conv_ch), ("embed", "ffn")),
+        "w_dt": ParamSpec((d, H), ("embed", "heads")),
+        "dt_bias": ParamSpec((H,), ("heads",), "zeros"),
+        "a_log": ParamSpec((H,), ("heads",), "ones"),
+        "d_skip": ParamSpec((H,), ("heads",), "ones"),
+        "conv_w": ParamSpec((K, conv_ch), (None, "ffn")),
+        "norm": ParamSpec((d_in,), ("ffn",), "zeros"),
+        "w_out": ParamSpec((d_in, d), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via K shifted adds (K=4: cheap, fusion-friendly)."""
+    K = w.shape[0]
+    out = xbc * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return out
+
+
+def mamba_forward(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """(B, L, d) -> (B, L, d) via chunked SSD.  L may be any length: the
+    sequence is zero-padded to a chunk multiple with dt masked to 0 on the
+    padding (decay=1, zero input), which leaves real positions untouched."""
+    B, L, d = x.shape
+    d_in, H, P, N, K = _dims(cfg)
+    Q = cfg.ssm.chunk
+    L_real = L
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        L = L + pad
+    nC = L // Q
+
+    z = x @ p["w_z"].astype(x.dtype)
+    xbc = _causal_conv(x @ p["w_xbc"].astype(x.dtype), p["conv_w"].astype(x.dtype))
+    xbc = jax.nn.silu(xbc)
+    xs, Bs, Cs = jnp.split(xbc, [d_in, d_in + N], axis=-1)      # (B,L,*)
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"].astype(x.dtype)).astype(jnp.float32) + p["dt_bias"]
+    )                                                            # (B,L,H)
+    if pad:
+        valid = (jnp.arange(L) < L_real)[None, :, None]
+        dt = dt * valid
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                 # (H,)
+
+    xh = xs.reshape(B, nC, Q, H, P)
+    Bc = Bs.reshape(B, nC, Q, N)
+    Cc = Cs.reshape(B, nC, Q, N)
+    dtc = dt.reshape(B, nC, Q, H)
+    da = dtc * A                                                 # (B,nC,Q,H)
+    seg = jnp.cumsum(da, axis=2)                                 # within-chunk
+
+    # ---- intra-chunk (quadratic in Q) ----------------------------------
+    # decay(i,j) = exp(seg_i - seg_j) for i >= j.  Mask BEFORE the exp:
+    # masked (i<j) differences are positive and overflow, and inf*0 inside
+    # a where poisons the backward pass (the classic where-grad trap).
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]          # (B,nC,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(mask, diff, -1e30))
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    w_intra = cb[..., None] * decay * dtc[:, :, None, :, :]       # (B,nC,Q,Q,H)
+    y = jnp.einsum("bcijh,bcjhp->bcihp", w_intra, xh.astype(jnp.float32))
+
+    # ---- inter-chunk state passing --------------------------------------
+    seg_last = seg[:, :, -1:, :]                                  # (B,nC,1,H)
+    decay_out = jnp.exp(seg_last - seg)                           # (B,nC,Q,H)
+    chunk_state = jnp.einsum(
+        "bcqh,bcqn,bcqhp->bchpn",
+        (decay_out * dtc).astype(jnp.float32),
+        Bc.astype(jnp.float32),
+        xh.astype(jnp.float32),
+    )                                                             # (B,nC,H,P,N)
+    chunk_decay = jnp.exp(seg_last[:, :, 0, :])                   # (B,nC,H)
+
+    def scan_body(s_prev, xs_):
+        cs, cd = xs_
+        s_new = s_prev * cd[:, :, None, None] + cs
+        return s_new, s_prev
+
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, s_before = jax.lax.scan(
+        scan_body,
+        s0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_before = s_before.transpose(1, 0, 2, 3, 4)                  # (B,nC,H,P,N)
+    decay_in = jnp.exp(seg)                                       # (B,nC,Q,H)
+    y = y + jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", Cc.astype(jnp.float32), decay_in, s_before
+    )
+
+    y = y + p["d_skip"][None, None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+    return out[:, :L_real] if pad else out
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    d_in, H, P, N, K = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, K - 1, d_in + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba_decode_step(
+    p, x: jnp.ndarray, cache: Dict[str, jnp.ndarray], cfg: ArchConfig
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, 1, d) -> (B, 1, d); O(1) state update."""
+    B = x.shape[0]
+    d_in, H, P, N, K = _dims(cfg)
+    z = x @ p["w_z"].astype(x.dtype)                              # (B,1,d_in)
+    xbc_new = x @ p["w_xbc"].astype(x.dtype)                      # (B,1,C)
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)    # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(x.dtype))
+    xbc = jax.nn.silu(conv_out)[:, None, :]                       # (B,1,C)
+    xs, Bs, Cs = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"].astype(x.dtype)).astype(jnp.float32) + p["dt_bias"]
+    )[:, 0]                                                       # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                       # (B,H)
+    xh = xs[:, 0].reshape(B, H, P).astype(jnp.float32)
+    Bn = Bs[:, 0].astype(jnp.float32)                             # (B,N)
+    Cn = Cs[:, 0].astype(jnp.float32)
+    s_new = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bn, xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cn, s_new) + p["d_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+    new_cache = {"conv": window[:, 1:], "ssm": s_new}
+    return out, new_cache

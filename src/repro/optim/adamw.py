@@ -1,0 +1,69 @@
+"""AdamW with global-norm clipping, pytree-native (no optax dependency).
+
+Moments are stored in ``cfg.opt_state_dtype`` — bf16 for the big-MoE archs
+(llama4/jamba) so param+state fits HBM (see DESIGN.md §4); the update math
+always runs in fp32.  State shards exactly like the parameters (the
+launcher's sharding rules apply to the whole (params, m, v) triple), which
+is ZeRO-style state sharding for free under GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params: Any, dtype: str = "float32") -> Tuple[Any, Any]:
+    dt = jnp.dtype(dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return jax.tree_util.tree_map(zeros, params), jax.tree_util.tree_map(zeros, params)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    m: Any,
+    v: Any,
+    step: jnp.ndarray,
+    cfg: AdamWConfig,
+    lr: jnp.ndarray | float | None = None,
+):
+    lr = cfg.lr if lr is None else lr
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+
+    def upd(p, g, m_, v_):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m_.astype(jnp.float32) + (1.0 - cfg.b1) * g
+        v_new = cfg.b2 * v_.astype(jnp.float32) + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m_.dtype), v_new.astype(v_.dtype)
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v)
+    new_p = jax.tree_util.tree_map(lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda x: x[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, new_m, new_v, gn

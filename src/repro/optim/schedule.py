@@ -1,0 +1,14 @@
+"""Warmup-stable-decay learning-rate schedule (pure function of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, base_lr: float, warmup: int = 100, total: int = 10000,
+                 decay_frac: float = 0.2, min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+    decay_start = total * (1.0 - decay_frac)
+    frac = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+    decay = 1.0 - (1.0 - min_frac) * frac
+    return warm * decay

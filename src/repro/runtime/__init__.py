@@ -1,0 +1,2 @@
+from repro.runtime.fault import StepWatchdog, FaultTolerantLoop  # noqa: F401
+from repro.runtime.elastic import plan_elastic_remesh  # noqa: F401

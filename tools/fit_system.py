@@ -1,0 +1,61 @@
+"""Calibration search for the IMC system model constants (run once; winning
+values are baked into repro/imc + repro/circuit defaults)."""
+import dataclasses, itertools, math, sys
+sys.path.insert(0, "src")
+from repro.circuit.bitline import BitlineParams
+from repro.circuit.senseamp import SenseAmpParams
+from repro.circuit.subarray import make_subarray
+from repro.imc.hierarchy import IMCHierarchy, IMCLevel, LevelSpec
+from repro.imc.cpu_model import CPUModel
+from repro.imc.evaluate import evaluate_workload, summarize
+from repro.imc.workloads import WORKLOADS
+
+def build(kind, c_per_cell, tau, tsetup, actives, e_periph_scale):
+    levels = {}
+    specs = [
+        LevelSpec("L1", 32*1024, 256, 256, actives[0], 1.0, 6e-12*e_periph_scale),
+        LevelSpec("L2", 1024*1024, 256, 256, actives[1], 1.3, 9e-12*e_periph_scale),
+        LevelSpec("MM", 8*1024**3, 512, 512, actives[2], 2.0, 18e-12*e_periph_scale),
+    ]
+    sa = SenseAmpParams(tau_latch=tau, t_setup=tsetup)
+    for spec in specs:
+        bl = BitlineParams(c_per_cell=c_per_cell*spec.c_per_cell_scale, rows=spec.rows)
+        sub = make_subarray(kind, rows=spec.rows, cols=spec.cols, v_write=1.0, bl=bl, sa=sa)
+        levels[spec.name] = IMCLevel(spec=spec, timings=sub.timings)
+    return IMCHierarchy(kind=kind, levels=levels)
+
+TARGETS = dict(bnn=55.4, mat_add=16.5, avg=17.5, e_avg=19.9, mtj_avg=6.0, mtj_e=2.3)
+
+def score(vals):
+    err = 0.0
+    for k, t in TARGETS.items():
+        err += abs(math.log(vals[k]/t))
+    return err
+
+best = None
+for c_per_cell in [0.03e-15, 0.06e-15]:
+    for tau in [15e-12, 25e-12]:
+        for actives in [(2,4,16), (2,8,32), (4,8,16)]:
+            for eps in [1.0, 3.0]:
+                for e_dram in [2e-9, 5e-9, 15e-9]:
+                    for e_instr in [40e-12, 65e-12]:
+                        cpu = CPUModel(e_dram_line=e_dram, e_instr=e_instr)
+                        out = {}
+                        for kind in ["afmtj", "mtj"]:
+                            h = build(kind, c_per_cell, tau, 20e-12, actives, eps)
+                            res = {n: evaluate_workload(w, h, cpu) for n, w in WORKLOADS.items()}
+                            sp, es = summarize(res)
+                            out[kind] = (res, sp, es)
+                        vals = dict(
+                            bnn=out["afmtj"][0]["bnn"].speedup,
+                            mat_add=out["afmtj"][0]["mat_add"].speedup,
+                            avg=out["afmtj"][1], e_avg=out["afmtj"][2],
+                            mtj_avg=out["mtj"][1], mtj_e=out["mtj"][2])
+                        s = score(vals)
+                        if best is None or s < best[0]:
+                            best = (s, dict(c=c_per_cell, tau=tau, act=actives, eps=eps,
+                                            e_dram=e_dram, e_instr=e_instr), vals)
+print("BEST score", best[0])
+print(best[1])
+for k, v in best[2].items():
+    print(f"  {k:8s} {v:8.1f} (target {TARGETS[k]})")

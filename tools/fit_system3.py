@@ -1,0 +1,41 @@
+import dataclasses, math, sys
+sys.path.insert(0, "src")
+exec(open("tools/fit_system2.py").read().split("best = None")[0])
+best = None
+for n_scale in [0.2, 0.25, 0.35]:
+    for bnn_instr in [0.6, 0.8, 1.0]:
+        wl_sets = sized_workloads(n_scale, bnn_instr)
+        for c in [0.03e-15]:
+            for tau in [20e-12, 25e-12, 30e-12]:
+                for actives in [(2,4,16),(2,4,12),(2,6,16)]:
+                    for eps in [0.2, 0.3, 0.5]:
+                        for e_dram in [0.3e-9, 0.5e-9, 0.8e-9]:
+                            for e_instr in [15e-12, 20e-12, 30e-12]:
+                                cpu = CPUModel(e_dram_line=e_dram, e_instr=e_instr)
+                                out = {}
+                                for kind in ["afmtj", "mtj"]:
+                                    h = build(kind, c, tau, actives, eps)
+                                    res = {n: evaluate_workload(w, h, cpu) for n, w in wl_sets.items()}
+                                    sp, es = summarize(res)
+                                    out[kind] = (res, sp, es)
+                                vals = dict(
+                                    bnn=out["afmtj"][0]["bnn"].speedup,
+                                    mat_add=out["afmtj"][0]["mat_add"].speedup,
+                                    avg=out["afmtj"][1], e_avg=out["afmtj"][2],
+                                    mtj_avg=out["mtj"][1], mtj_e=out["mtj"][2])
+                                s = score(vals)
+                                if best is None or s < best[0]:
+                                    best = (s, dict(n_scale=n_scale, bnn_instr=bnn_instr, c=c, tau=tau,
+                                                    act=actives, eps=eps, e_dram=e_dram, e_instr=e_instr), vals)
+print("BEST score", best[0]); print(best[1])
+for k, v in best[2].items(): print(f"  {k:8s} {v:8.1f} (target {TARGETS[k]})")
+# print the full per-workload table at the optimum
+cfg = best[1]
+cpu = CPUModel(e_dram_line=cfg["e_dram"], e_instr=cfg["e_instr"])
+wl = sized_workloads(cfg["n_scale"], cfg["bnn_instr"])
+for kind in ["afmtj", "mtj"]:
+    h = build(kind, cfg["c"], cfg["tau"], cfg["act"], cfg["eps"])
+    res = {n: evaluate_workload(w, h, cpu) for n, w in wl.items()}
+    print(f"--- {kind}")
+    for n, r in res.items():
+        print(f"  {n:14s} {r.speedup:7.1f}x  {r.energy_saving:7.1f}x")

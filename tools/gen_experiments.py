@@ -1,0 +1,20 @@
+"""Assemble EXPERIMENTS.md §Dry-run table from results/dryrun/*.json."""
+import json, sys
+from pathlib import Path
+REPO = Path(__file__).resolve().parents[1]
+rows = []
+for f in sorted((REPO/"results"/"dryrun").glob("*.json")):
+    r = json.loads(f.read_text())
+    mem = (r["memory"]["argument_size_in_bytes"] + r["memory"]["temp_size_in_bytes"]) / 1e9
+    coll = sum(v["bytes"] for v in r["collectives"].values())/1e9
+    rows.append((r["arch"], r["shape"], r["mesh"], r["n_devices"], mem,
+                 r.get("flops_audit_per_device", 0)/1e12, coll,
+                 r["t_compile_s"]))
+order = ["gemma2-2b","internlm2-20b","qwen2-0.5b","qwen3-8b","qwen2-vl-2b",
+         "llama4-maverick-400b-a17b","olmoe-1b-7b","seamless-m4t-large-v2",
+         "mamba2-780m","jamba-1.5-large-398b"]
+rows.sort(key=lambda r: (order.index(r[0]), r[1], r[2]))
+print("| arch | shape | mesh | chips | bytes/dev (GB) | TFLOPs/dev | coll GB/dev | compile (s) |")
+print("|---|---|---|---|---|---|---|---|")
+for a,s,m,n,mem,fl,c,tc in rows:
+    print(f"| {a} | {s} | {m} | {n} | {mem:.2f} | {fl:.2f} | {c:.1f} | {tc:.0f} |")
