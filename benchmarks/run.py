@@ -180,17 +180,71 @@ def bench_kernels():
 
 
 def bench_wer():
-    """Beyond-paper: thermal Monte-Carlo write-error rate vs pulse width —
+    """Campaign engine: WER(voltage, pulse) surface through the Pallas
+    thermal kernel, vs the per-sample scan path in core/montecarlo.py —
     the reliability spec a write controller binds against."""
-    from repro.core.montecarlo import write_error_rate
+    from repro.campaign import CampaignGrid, run_campaign
+    from repro.core.montecarlo import write_error_rate_scan
     from repro.core.params import AFMTJ_PARAMS
+    from repro.imc.write_margin import wer_margined_pulse
 
-    print("# wer: write-error rate vs pulse width (AFMTJ @1.0V, 32 thermal samples)")
+    voltages = (0.6, 0.8, 1.0, 1.2)
+    pulses = tuple(x * 1e-12 for x in (100, 150, 200, 250, 300, 350, 400))
+    n_samples = 128                       # 4 V x 128 S fills one CELL_TILE
+    grid = CampaignGrid(voltages=voltages, pulse_widths=pulses,
+                        n_samples=n_samples, dt=0.1e-12, seed=0)
+    print("# wer: campaign engine WER(V, pulse) surface "
+          f"({len(voltages)}V x {len(pulses)}P x {n_samples}S, "
+          f"{grid.n_steps} steps)")
     print("name,us_per_call,derived")
-    for pulse in (150e-12, 250e-12, 400e-12):
-        w, us = _t(write_error_rate, AFMTJ_PARAMS, 1.0, pulse, n_samples=32)
-        print(f"wer.afmtj.1V.{pulse*1e12:.0f}ps,{us:.0f},{float(w):.3f}")
-    print("# mean intrinsic t_sw ~123ps; a 2x margin pulse drives WER -> 0")
+
+    # steady-state comparison: warm the engine AND every scan pulse width
+    # (pulse_s is a jit static, so each pulse is its own compile — excluded
+    # here; note that in real campaigns the scan path pays that recompile
+    # per pulse point while the engine never does)
+    warm = CampaignGrid(voltages=voltages, pulse_widths=pulses,
+                        n_samples=n_samples, dt=0.1e-12, seed=1)
+    run_campaign(AFMTJ_PARAMS, warm, use_cache=False)
+    for pl_ in pulses:
+        write_error_rate_scan(AFMTJ_PARAMS, 1.0, pl_,
+                              n_samples=32).block_until_ready()
+
+    res, us_engine = _t(lambda: run_campaign(AFMTJ_PARAMS, grid,
+                                             use_cache=False))
+    wer = res.wer()
+    for i, v in enumerate(voltages):
+        for j in (0, 3, 6):               # print a readable subset
+            print(f"wer.afmtj.{v:.1f}V.{pulses[j]*1e12:.0f}ps,"
+                  f"{us_engine/res.n_samples_total:.0f},{wer[i, j]:.3f}")
+
+    # scan baseline: producing the same pulse axis takes one integration
+    # per (V, pulse) point — time the 1.0 V row, 32 samples each, warmed
+    us_scan_total, scan_runs = 0.0, 0
+    for pl_ in pulses:
+        w, us = _t(write_error_rate_scan, AFMTJ_PARAMS, 1.0, pl_,
+                   n_samples=32)
+        us_scan_total += us / 32          # us per sample at this pulse
+        scan_runs += 1
+        if pl_ in (pulses[0], pulses[3], pulses[6]):
+            print(f"wer.scan.1.0V.{pl_*1e12:.0f}ps,{us/32:.0f},{float(w):.3f}")
+
+    # per *sample of the full surface*: one engine sample covers every
+    # pulse width (first-crossing post-processing); a scan sample must be
+    # re-integrated once per pulse point
+    us_engine_per = us_engine / res.n_samples_total
+    us_scan_per = us_scan_total           # summed over the pulse axis
+    print(f"wer.engine.us_per_sample,{us_engine_per:.0f},"
+          f"{res.n_samples_total}")
+    print(f"wer.scan.us_per_sample,{us_scan_per:.0f},{scan_runs * 32}")
+    print(f"# engine {us_engine_per:.0f} us/sample (all {len(pulses)} "
+          f"pulses) vs scan {us_scan_per:.0f} us/sample (re-integrated per "
+          f"pulse, steady-state) -> {us_scan_per/us_engine_per:.1f}x fewer "
+          "us per sample (target >= 5x)")
+
+    pulse = wer_margined_pulse("afmtj", 1.0, wer_target=1e-2, n_samples=128)
+    print(f"wer.margin_pulse_ps@1V.wer1e-2,0,{pulse*1e12:.0f}")
+    print("# mean intrinsic t_sw ~123ps; the WER<=1e-2 pulse covers the "
+          "thermal tail the IMC controller schedules against")
 
 
 BENCHES = {

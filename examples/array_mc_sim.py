@@ -1,10 +1,12 @@
-"""Array-scale Monte-Carlo write simulation using the Pallas LLG kernel.
+"""Array-scale thermal Monte-Carlo write simulation via the campaign engine.
 
 Simulates every cell of an AFMTJ subarray (with per-cell voltage variation
-from IR drop) through the dual-sublattice LLG dynamics in one kernel launch
-— the TPU-native replacement for the paper's per-cell SPICE runs.  Reports
-the write-latency distribution and worst-case cell (what sets the array's
-pulse width + write-error margin).
+from IR drop *and* 300 K thermal noise in-kernel) through the dual-sublattice
+LLG dynamics in one Pallas launch — the TPU-native replacement for the
+paper's per-cell SPICE runs.  Reports the write-latency distribution, the
+worst-case cell, and the WER(pulse) curve the array controller binds
+against (``repro.campaign`` reduces first-crossing steps, so every pulse
+width is read off the same integration).
 
     PYTHONPATH=src python examples/array_mc_sim.py
 """
@@ -12,13 +14,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.campaign import run_ensemble
 from repro.core import llg
+from repro.core.device import thermal_theta0
 from repro.core.params import AFMTJ_PARAMS
-from repro.kernels import ops
+from repro.imc.write_margin import wer_margined_pulse
 
 ROWS, COLS = 64, 64
 DT = 0.1e-12
-N_STEPS = 4000
+N_STEPS = 4100          # horizon > the longest WER pulse below (400 ps), so
+                        # never-switched cells can't alias a 400 ps success
 
 
 def main():
@@ -27,25 +32,42 @@ def main():
     k1, k2 = jax.random.split(key)
 
     # thermal spread of initial angles + IR-drop voltage gradient down rows
-    theta = jnp.abs(jax.random.normal(k1, (n,))) * 0.112 + 0.02
+    th0 = float(thermal_theta0(AFMTJ_PARAMS))
+    theta = jnp.abs(jax.random.normal(k1, (n,))) * th0 + 0.02
     phi = jax.random.uniform(k2, (n,), maxval=2 * jnp.pi)
     m0 = jax.vmap(lambda t, f: llg.initial_state(AFMTJ_PARAMS, t, f))(theta, phi)
     row = jnp.arange(n) // COLS
     v = 1.0 - 0.15 * (row / ROWS)          # 1.0 V driver, 15% IR drop
 
-    state = ops.pack_states(m0, v)
-    out = ops.llg_rk4(state, AFMTJ_PARAMS, DT, N_STEPS)
-    _, cross = ops.unpack_states(out, n)
+    # one engine call: per-cell drives + in-kernel 300 K Langevin field,
+    # sharded across however many devices are visible (first call pays the
+    # jit compile, so warm before quoting throughput)
+    run_ensemble(AFMTJ_PARAMS, m0, v, DT, N_STEPS, seed=0)
+    res = run_ensemble(AFMTJ_PARAMS, m0, v, DT, N_STEPS, seed=0)
 
-    t_sw = np.asarray(cross) * DT * 1e12
-    switched = t_sw < N_STEPS * DT * 1e12
-    print(f"array {ROWS}x{COLS}: {switched.mean()*100:.1f}% switched "
-          f"within {N_STEPS*DT*1e12:.0f} ps")
+    t_sw = res.crossing_time * 1e12
+    switched = res.switched
+    print(f"array {ROWS}x{COLS} @300K: {switched.mean()*100:.1f}% switched "
+          f"within {N_STEPS*DT*1e12:.0f} ps  "
+          f"({res.elapsed_s*1e6/n:.0f} us/cell, one kernel launch)")
     ok = t_sw[switched]
     print(f"t_switch: mean {ok.mean():.0f} ps, p50 {np.percentile(ok,50):.0f}, "
           f"p99 {np.percentile(ok,99):.0f}, max {ok.max():.0f} ps")
-    print(f"=> array write pulse must cover the worst cell: "
-          f"{ok.max()*1.05 + 40:.0f} ps (margin + RC)")
+
+    # WER(pulse) for the whole array falls out of the same first crossings
+    print("\npulse_ps  array_WER")
+    for pulse in (250e-12, 300e-12, 350e-12, 400e-12):
+        wer = float((res.crossing_time > pulse).mean())
+        print(f"{pulse*1e12:8.0f}  {wer:.4f}")
+
+    # size the controller pulse at the WORST cell: the far row only sees
+    # ~0.85 V after IR drop, and WER rises as drive falls — a margin taken
+    # at the 1.0 V driver voltage would under-cover those cells
+    v_worst = float(jnp.min(v))
+    pulse = wer_margined_pulse("afmtj", v_write=round(v_worst, 2),
+                               wer_target=1e-2)
+    print(f"\n=> controller pulse for WER<=1e-2 at the worst IR-drop cell "
+          f"({v_worst:.2f} V): {pulse*1e12:.0f} ps (campaign-engine margin)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,20 @@
+"""Thermal Monte-Carlo campaign engine (DESIGN.md §5).
+
+Packs (voltage x pulse x temperature x sample) reliability grids into the
+Pallas thermal LLG kernel's ``(8, cells)`` SoA layout, shards cell tiles
+across devices, and reduces first-crossing steps into WER / latency
+surfaces with on-disk result caching.
+
+  grid    — CampaignGrid axes + SoA packing
+  engine  — run_campaign / run_ensemble + surface reductions
+  cache   — content-addressed npz result cache
+"""
+from repro.campaign.cache import campaign_key  # noqa: F401
+from repro.campaign.engine import (  # noqa: F401
+    CampaignResult,
+    EnsembleResult,
+    brown_sigma,
+    run_campaign,
+    run_ensemble,
+)
+from repro.campaign.grid import CampaignGrid, pack_plane  # noqa: F401

@@ -1,0 +1,78 @@
+"""On-disk campaign result cache (content-addressed npz).
+
+A campaign is expensive (minutes of kernel time for production grids) and
+perfectly reproducible: the result is a pure function of (device params,
+grid axes, backend, kernel version).  So results are cached under a sha256
+content key — re-running a benchmark or re-building an IMC hierarchy with
+WER-margined pulses hits the cache instead of re-integrating.
+
+Layout: ``<cache_dir>/<key>.npz`` holding the crossing-time tensor plus a
+json header echoing the inputs (for `ls`-ability / debugging).  Writes are
+atomic (tmp + rename) so concurrent campaign processes never observe a
+torn file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.core.params import DeviceParams
+
+# bump when the kernel's noise stream or integration scheme changes — old
+# cached surfaces are then silently invalidated (different key)
+KERNEL_VERSION = 2
+
+DEFAULT_CACHE_DIR = os.environ.get(
+    "REPRO_CAMPAIGN_CACHE", os.path.join(os.path.expanduser("~"),
+                                         ".cache", "repro-campaigns"))
+
+
+def campaign_key(p: DeviceParams, grid, backend: str) -> str:
+    """Content hash of everything the crossing-time tensor depends on."""
+    payload = {
+        "v": KERNEL_VERSION,
+        "params": dataclasses.asdict(p),
+        "grid": dataclasses.asdict(grid),
+        "backend": backend,
+    }
+    blob = json.dumps(payload, sort_keys=True, default=float)
+    return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+
+def load(key: str, cache_dir: Optional[str] = None) -> Optional[np.ndarray]:
+    """Cached (n_T, n_V, n_S) crossing-time tensor, or None on miss."""
+    path = Path(cache_dir or DEFAULT_CACHE_DIR) / f"{key}.npz"
+    if not path.exists():
+        return None
+    try:
+        with np.load(path) as z:
+            return z["crossing_time"]
+    except (OSError, KeyError, ValueError):
+        return None                      # corrupt entry == miss
+
+
+def store(key: str, crossing_time: np.ndarray, header: dict,
+          cache_dir: Optional[str] = None) -> Path:
+    d = Path(cache_dir or DEFAULT_CACHE_DIR)
+    d.mkdir(parents=True, exist_ok=True)
+    final = d / f"{key}.npz"
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez_compressed(
+                f, crossing_time=crossing_time,
+                header=np.frombuffer(
+                    json.dumps(header, default=float).encode(), dtype=np.uint8),
+            )
+        os.replace(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return final

@@ -1,0 +1,262 @@
+"""Monte-Carlo campaign engine: one kernel launch per (temperature) tile.
+
+Replaces the per-sample host-visible scan in ``core.montecarlo`` (O(steps)
+XLA while-loop per sample, threefry keys split per step) with the Pallas
+thermal LLG kernel: the whole (voltage x sample) plane rides in one
+``(8, cells)`` SoA launch, per-lane counter-RNG streams supply the thermal
+field in-kernel, and the pulse-width axis falls out of the recorded
+first-crossing steps for free (see ``grid.py``).
+
+Scaling: the cells axis is embarrassingly parallel, so the engine shards
+cell tiles across every visible device with ``shard_map`` — each device
+integrates its own ``cells / n_dev`` lanes (a multiple of the kernel's
+CELL_TILE), no cross-device communication at all.  Results are reduced
+host-side into WER / latency-percentile surfaces and cached on disk
+(``cache.py``) keyed by the full campaign content hash.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.campaign import cache as _cache
+from repro.campaign.grid import CampaignGrid, pack_plane
+from repro.core.montecarlo import thermal_sigma
+from repro.core.params import DeviceParams
+from repro.kernels import noise, ref
+from repro.kernels.llg_rk4 import CELL_TILE, llg_rk4_pallas
+from repro.kernels.ops import _default_interpret, pack_states
+
+
+def brown_sigma(p: DeviceParams, dt: float, temperature: Optional[float] = None
+                ) -> float:
+    """Brown's thermal-field std per component per step [T] — canonical
+    formula lives in ``core.montecarlo.thermal_sigma``."""
+    if temperature is not None and temperature != p.temperature:
+        p = dataclasses.replace(p, temperature=float(temperature))
+    return thermal_sigma(p, dt)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "p", "dt", "n_steps", "sigma", "switch_threshold", "backend", "n_dev"))
+def _integrate_sharded(state, seeds, *, p: DeviceParams, dt: float,
+                       n_steps: int, sigma: float, switch_threshold: float,
+                       backend: str, n_dev: int):
+    """Advance a (8, cells) block on ``n_dev`` devices (cells sharded)."""
+
+    def tile_fn(st, sd):
+        if backend == "ref":
+            return ref.ref_llg_rk4(st, p, dt, n_steps, switch_threshold,
+                                   thermal_sigma=sigma, seeds=sd)
+        return llg_rk4_pallas(st, p, dt, n_steps, switch_threshold,
+                              interpret=_default_interpret(),
+                              thermal_sigma=sigma, seeds=sd)
+
+    if n_dev == 1:
+        return tile_fn(state, seeds)
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("cells",))
+    # check_rep=False: shard_map has no replication rule for pallas_call;
+    # every output is fully sharded along cells anyway
+    fn = shard_map(tile_fn, mesh=mesh,
+                   in_specs=(P(None, "cells"), P("cells")),
+                   out_specs=P(None, "cells"), check_rep=False)
+    return fn(state, seeds)
+
+
+def _usable_devices(cells_padded: int, devices: Optional[int]) -> int:
+    """Largest device count (<= requested/visible) whose per-shard slice is
+    a whole number of CELL_TILE tiles."""
+    n = jax.device_count() if devices is None else min(devices, jax.device_count())
+    tiles = cells_padded // CELL_TILE
+    while n > 1 and tiles % n != 0:
+        n -= 1
+    return max(n, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleResult:
+    """One thermal ensemble integration (a single campaign tile)."""
+    final_state: np.ndarray      # (8, cells) SoA after n_steps
+    crossing_steps: np.ndarray   # (cells,) first crossing (== n_steps: none)
+    n_steps: int
+    dt: float
+    elapsed_s: float
+
+    @property
+    def crossing_time(self) -> np.ndarray:
+        return self.crossing_steps * self.dt
+
+    @property
+    def switched(self) -> np.ndarray:
+        return self.crossing_steps < self.n_steps
+
+
+def run_ensemble(
+    p: DeviceParams,
+    m0: jnp.ndarray,                 # (cells, n_sub, 3) initial states
+    voltages: jnp.ndarray,           # (cells,) per-cell drive
+    dt: float,
+    n_steps: int,
+    *,
+    seed: int = 0,
+    temperature: Optional[float] = None,
+    backend: str = "pallas",
+    switch_threshold: float = 0.9,
+    devices: Optional[int] = None,
+) -> EnsembleResult:
+    """Integrate an arbitrary thermal ensemble through the kernel path.
+
+    The general entry point (used by ``examples/array_mc_sim.py`` for
+    per-cell IR-drop voltage maps); ``run_campaign`` packs structured
+    (V x S) grids on top of it.  ``temperature=None`` uses ``p.temperature``;
+    ``temperature=0`` (or alpha/volume making sigma 0) falls back to the
+    deterministic kernel.
+
+    Never-switched lanes report ``crossing_steps == n_steps`` (so
+    ``crossing_time == n_steps*dt``); when thresholding crossings against a
+    pulse width, choose ``n_steps`` with ``n_steps*dt`` strictly beyond the
+    longest pulse (``CampaignGrid`` does this automatically).
+    """
+    cells = m0.shape[0]
+    state = pack_states(m0, jnp.asarray(voltages, jnp.float32))
+    padded = state.shape[1]
+    sigma = brown_sigma(p, dt, temperature)
+    seeds = noise.cell_seeds(seed, padded)
+    n_dev = _usable_devices(padded, devices)
+
+    t0 = time.time()
+    out = _integrate_sharded(
+        state, seeds, p=p, dt=dt, n_steps=n_steps, sigma=float(sigma),
+        switch_threshold=float(switch_threshold), backend=backend,
+        n_dev=n_dev)
+    out = np.asarray(jax.block_until_ready(out))
+    elapsed = time.time() - t0
+    return EnsembleResult(
+        final_state=out[:, :cells], crossing_steps=out[7, :cells],
+        n_steps=n_steps, dt=dt, elapsed_s=elapsed)
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignResult:
+    """WER / latency surfaces over the (T, V, pulse) axes of a grid."""
+    grid: CampaignGrid
+    backend: str
+    crossing_time: np.ndarray        # (n_T, n_V, n_S) seconds
+    elapsed_s: float                 # integration wall-clock (0 on cache hit)
+    from_cache: bool = False
+
+    @property
+    def n_samples_total(self) -> int:
+        n_t, n_v, _, n_s = self.grid.shape
+        return n_t * n_v * n_s
+
+    def wer_surface(self) -> np.ndarray:
+        """(n_T, n_V, n_P) write-error rate: fraction of thermal samples NOT
+        switched by the end of each pulse width."""
+        pulses = np.asarray(self.grid.pulse_widths)
+        # crossing_time == n_steps*dt marks "never crossed" and exceeds
+        # every pulse in the grid by construction
+        ct = self.crossing_time[:, :, None, :]            # (T, V, 1, S)
+        return (ct > pulses[None, None, :, None]).mean(axis=-1)
+
+    def wer(self, t_index: int = 0) -> np.ndarray:
+        """(n_V, n_P) slice at one temperature."""
+        return self.wer_surface()[t_index]
+
+    def latency_percentiles(self, qs: Sequence[float] = (50.0, 99.0)
+                            ) -> np.ndarray:
+        """(n_T, n_V, len(qs)) switching-latency percentiles over *switched*
+        samples (NaN where no sample switched)."""
+        n_t, n_v, _, _ = self.grid.shape
+        horizon = self.grid.n_steps * self.grid.dt
+        out = np.full((n_t, n_v, len(qs)), np.nan)
+        for t in range(n_t):
+            for v in range(n_v):
+                ct = self.crossing_time[t, v]
+                ok = ct < horizon
+                if ok.any():
+                    out[t, v] = np.percentile(ct[ok], qs)
+        return out
+
+    def pulse_for_wer(self, wer_target: float, t_index: int = 0,
+                      v_index: Optional[int] = None) -> float:
+        """Smallest grid pulse width whose WER <= target (the write-margin
+        query the IMC controller binds against).  ``v_index=None`` (default)
+        evaluates at the *lowest* grid voltage — the worst-case drive, so a
+        controller pulse sized from the default covers every cell — not at
+        whatever voltage happens to be listed last.  Raises if no grid
+        pulse qualifies — callers must widen the grid rather than silently
+        build timing models on a pulse that misses the WER target."""
+        if v_index is None:
+            v_index = int(np.argmin(self.grid.voltages))
+        w = self.wer(t_index)[v_index]
+        pulses = np.asarray(self.grid.pulse_widths)
+        ok = np.nonzero(w <= wer_target)[0]
+        if not ok.size:
+            raise ValueError(
+                f"no grid pulse meets WER<={wer_target:g} (best WER "
+                f"{w.min():.3g} at {pulses[-1]*1e12:.0f} ps); widen "
+                "pulse_widths or raise the drive voltage")
+        return float(pulses[ok[0]])
+
+
+def run_campaign(
+    p: DeviceParams,
+    grid: CampaignGrid,
+    *,
+    backend: str = "pallas",
+    use_cache: bool = True,
+    cache_dir: Optional[str] = None,
+    devices: Optional[int] = None,
+) -> CampaignResult:
+    """Run (or cache-load) a full Monte-Carlo campaign.
+
+    One thermal-kernel launch per temperature slice; voltage and sample ride
+    the packed cells axis, pulse width is post-processing.  ``backend`` is
+    "pallas" (production) or "ref" (pure-jnp oracle — same noise streams,
+    used for parity checks and throughput baselines).
+    """
+    assert backend in ("pallas", "ref"), backend
+    key = _cache.campaign_key(p, grid, backend)
+    if use_cache:
+        hit = _cache.load(key, cache_dir)
+        if hit is not None and hit.shape == (
+                len(grid.temperatures), len(grid.voltages), grid.n_samples):
+            return CampaignResult(grid=grid, backend=backend,
+                                  crossing_time=hit, elapsed_s=0.0,
+                                  from_cache=True)
+
+    n_t, n_v, _, n_s = grid.shape
+    crossing = np.empty((n_t, n_v, n_s))
+    elapsed = 0.0
+    n_steps = grid.n_steps
+    for ti, temp in enumerate(grid.temperatures):
+        p_t = dataclasses.replace(p, temperature=float(temp))
+        state, seeds = pack_plane(grid, p_t, ti)
+        sigma = brown_sigma(p_t, grid.dt)
+        n_dev = _usable_devices(state.shape[1], devices)
+        t0 = time.time()
+        out = _integrate_sharded(
+            state, seeds, p=p_t, dt=grid.dt, n_steps=n_steps,
+            sigma=float(sigma), switch_threshold=float(grid.switch_threshold),
+            backend=backend, n_dev=n_dev)
+        out = np.asarray(jax.block_until_ready(out))
+        elapsed += time.time() - t0
+        crossing[ti] = out[7, :grid.cells].reshape(n_v, n_s) * grid.dt
+
+    if use_cache:
+        _cache.store(key, crossing,
+                     header={"params": dataclasses.asdict(p),
+                             "grid": dataclasses.asdict(grid),
+                             "backend": backend},
+                     cache_dir=cache_dir)
+    return CampaignResult(grid=grid, backend=backend, crossing_time=crossing,
+                          elapsed_s=elapsed)

@@ -1,0 +1,107 @@
+"""Campaign grids: (voltage x pulse x temperature x sample) -> SoA tiles.
+
+A *campaign* is the Monte-Carlo experiment the paper's reliability story
+needs: sweep write voltage, pulse width and temperature, run many thermal
+samples per point, and reduce to WER / latency-percentile surfaces.
+
+Key packing insight: pulse width does **not** need its own simulation axis.
+The kernel records the *first-crossing step* per cell, so one integration to
+``max(pulse)/dt`` steps yields WER at every shorter pulse by thresholding
+the crossing time — the pulse axis is pure post-processing.  Temperature
+changes Brown's sigma (a compile-time kernel scalar), so it stays a
+host-level loop (few values).  What is packed into the kernel's ``(8,
+cells)`` SoA layout is the (voltage x sample) plane: ``cells = n_V * n_S``
+lanes, each an independent thermal stream (per-lane counter-RNG seed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import llg
+from repro.core.device import thermal_theta0
+from repro.core.params import DeviceParams
+from repro.kernels import noise
+from repro.kernels.ops import pack_states
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignGrid:
+    """Axes of one Monte-Carlo campaign (all hashable -> usable as jit
+    statics and as the on-disk cache key)."""
+
+    voltages: Tuple[float, ...]
+    pulse_widths: Tuple[float, ...]          # [s], post-processing axis
+    temperatures: Tuple[float, ...] = (300.0,)
+    n_samples: int = 64
+    dt: float = 0.1e-12
+    seed: int = 0
+    switch_threshold: float = 0.9
+
+    def __post_init__(self):
+        object.__setattr__(self, "voltages", tuple(float(v) for v in self.voltages))
+        # pulse axis is normalized ascending: it is pure post-processing
+        # (surfaces index through grid.pulse_widths) and pulse_for_wer's
+        # "smallest qualifying pulse" contract depends on the order
+        object.__setattr__(self, "pulse_widths",
+                           tuple(sorted(float(t) for t in self.pulse_widths)))
+        object.__setattr__(self, "temperatures",
+                           tuple(float(t) for t in self.temperatures))
+        assert self.voltages and self.pulse_widths and self.temperatures
+        assert self.n_samples > 0
+
+    @property
+    def n_steps(self) -> int:
+        """Integration length covering the longest pulse, plus one step so
+        the kernel's never-crossed sentinel (crossing_step == n_steps, i.e.
+        crossing_time == n_steps*dt) strictly exceeds every pulse width —
+        otherwise lanes that never switch would satisfy ``crossing_time <=
+        max(pulse)`` and be miscounted as successful writes."""
+        return int(math.ceil(max(self.pulse_widths) / self.dt)) + 1
+
+    @property
+    def cells(self) -> int:
+        """Real (unpadded) lanes in the packed (voltage x sample) plane."""
+        return len(self.voltages) * self.n_samples
+
+    @property
+    def shape(self) -> Tuple[int, int, int, int]:
+        """(n_T, n_V, n_P, n_S) — the result surface axes."""
+        return (len(self.temperatures), len(self.voltages),
+                len(self.pulse_widths), self.n_samples)
+
+
+def pack_plane(grid: CampaignGrid, p: DeviceParams, t_index: int):
+    """Pack the (voltage x sample) plane for one temperature slice.
+
+    Returns ``(state, seeds)``: the ``(8, cells_padded)`` SoA block and the
+    matching ``(cells_padded,)`` uint32 per-lane thermal stream seeds.
+    Sample ``s`` of voltage ``v_i`` lands at lane ``i * n_samples + s``.
+
+    Initial states follow ``core.montecarlo``: |N(0,1)| * theta_eq + 0.01
+    tilt, uniform azimuth — the Boltzmann spread of the idle cell.  The tilt
+    RNG is ``jax.random`` off ``grid.seed`` (host-side, once per campaign);
+    the *per-step* thermal field streams are counter-RNG seeds derived from
+    ``grid.seed`` and the temperature index so every (T, V, S) lane is an
+    independent realization.
+    """
+    n_v, n_s = len(grid.voltages), grid.n_samples
+    cells = n_v * n_s
+    key = jax.random.fold_in(jax.random.PRNGKey(grid.seed), t_index)
+    k_th, k_ph = jax.random.split(key)
+    th = jnp.abs(jax.random.normal(k_th, (cells,))) * thermal_theta0(p) + 0.01
+    ph = jax.random.uniform(k_ph, (cells,), maxval=2 * jnp.pi)
+    m0 = jax.vmap(lambda t, f: llg.initial_state(p, t, f))(th, ph)
+    v = jnp.repeat(jnp.asarray(grid.voltages, jnp.float32), n_s)
+
+    state = pack_states(m0, v)                      # pads to CELL_TILE
+    padded = state.shape[1]
+    # distinct stream block per temperature slice: offset the base seed so
+    # T=0 and T=1 lanes never share counters
+    base = (grid.seed * 0x9E3779B1 + t_index * 0x85EB_CA6B) & 0xFFFFFFFF
+    seeds = noise.cell_seeds(base, padded)
+    return state, seeds

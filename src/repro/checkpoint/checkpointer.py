@@ -27,7 +27,14 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+# zstandard is gated: absent (e.g. minimal containers) we fall back to
+# uncompressed msgpack shards (.msgpack instead of .msgpack.zst) — restore
+# picks whichever extension exists, so checkpoints stay readable either way
+try:
+    import zstandard
+except ImportError:
+    zstandard = None
 
 
 def _flatten_with_paths(tree: Any):
@@ -73,9 +80,12 @@ class Checkpointer:
                 p: (a.tobytes(), str(a.dtype), list(a.shape))
                 for p, a in zip(paths, host_leaves)
             }
-            cctx = zstandard.ZstdCompressor(level=3)
-            blob = cctx.compress(msgpack.packb(payload, use_bin_type=True))
-            (tmp / f"host{self.host_rank}.msgpack.zst").write_bytes(blob)
+            blob = msgpack.packb(payload, use_bin_type=True)
+            if zstandard is not None:
+                blob = zstandard.ZstdCompressor(level=3).compress(blob)
+                (tmp / f"host{self.host_rank}.msgpack.zst").write_bytes(blob)
+            else:
+                (tmp / f"host{self.host_rank}.msgpack").write_bytes(blob)
             (tmp / "manifest.json").write_text(json.dumps(manifest))
             if final.exists():
                 shutil.rmtree(final)
@@ -112,8 +122,15 @@ class Checkpointer:
 
     def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
         d = self.dir / f"step_{step}"
-        dctx = zstandard.ZstdDecompressor()
-        blob = dctx.decompress((d / f"host{self.host_rank}.msgpack.zst").read_bytes())
+        zst = d / f"host{self.host_rank}.msgpack.zst"
+        if zst.exists():
+            if zstandard is None:
+                raise ModuleNotFoundError(
+                    "checkpoint was written zstd-compressed; pip install "
+                    "-r requirements-dev.txt to restore it")
+            blob = zstandard.ZstdDecompressor().decompress(zst.read_bytes())
+        else:
+            blob = (d / f"host{self.host_rank}.msgpack").read_bytes()
         payload = msgpack.unpackb(blob, raw=False)
         paths, leaves, treedef = _flatten_with_paths(like)
         out = []

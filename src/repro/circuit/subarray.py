@@ -102,6 +102,7 @@ def make_subarray(
     v_write: float = 1.0,
     bl: BitlineParams | None = None,
     sa: SenseAmpParams | None = None,
+    wer_target: float | None = None,
 ) -> Subarray:
     dev = AFMTJ_PARAMS if kind == "afmtj" else MTJ_PARAMS
     bl = bl or BitlineParams(rows=rows)
@@ -110,6 +111,17 @@ def make_subarray(
     # --- device-level write characterization (the LLG solve, cached) -------
     t_rc = write_path_rc(bl)
     t_sw, e_sw = _characterize_write(kind, v_write)
+    if wer_target is not None:
+        # thermal-tail margin: size the pulse so WER <= target via the
+        # Monte-Carlo campaign engine instead of the mean switching time
+        from repro.imc.write_margin import wer_margined_pulse
+
+        t_pulse = wer_margined_pulse(kind, v_write, wer_target)
+        t_pulse = max(t_pulse, t_sw)
+        # the post-switch tail of the pulse burns energy at the written
+        # (antiparallel) state's conductance
+        e_sw = e_sw + v_write**2 / dev.r_antiparallel * (t_pulse - t_sw)
+        t_sw = t_pulse
     # t_rc enters additively (driver charges the line, then the pulse runs);
     # overhead energy at the parallel-state conductance.
     t_write = t_sw + t_rc

@@ -141,8 +141,9 @@ SHAPES = {
     "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
 }
 
-# Archs whose long_500k cell is skipped (pure full-attention families) — the
-# sanctioned skip list; see DESIGN.md §3.
+# Archs whose long_500k cell RUNS (constant-state SSM / sparse-KV hybrid
+# families); every pure full-attention arch skips it — the sanctioned skip
+# list; see DESIGN.md §3.
 LONG_CONTEXT_ARCHS = ("mamba2-780m", "jamba-1.5-large-398b")
 
 

@@ -5,6 +5,14 @@ Brown's thermal field: per-component std  sigma_B = sqrt(2 alpha k_B T /
 why write pulses need margin: WER(pulse) is the MRAM reliability metric a
 controller binds against (the paper's pipelined controller assumes a pulse
 that covers the thermal tail).
+
+``write_error_rate`` routes through the campaign engine
+(``repro.campaign``): the whole thermal ensemble rides one Pallas kernel
+launch with in-kernel counter-RNG noise instead of a per-sample
+scan-over-steps.  The original pure-jnp path is kept as
+``write_error_rate_scan`` — it is the statistical baseline the engine is
+benchmarked against (``benchmarks/run.py --only wer``) and a second,
+independently-seeded implementation of the same physics.
 """
 from __future__ import annotations
 
@@ -27,7 +35,6 @@ def thermal_sigma(p: DeviceParams, dt: float) -> float:
     )
 
 
-@partial(jax.jit, static_argnames=("p", "pulse_s", "n_steps", "n_samples", "dt"))
 def write_error_rate(
     p: DeviceParams,
     voltage: float,
@@ -36,8 +43,44 @@ def write_error_rate(
     dt: float = 0.1e-12,
     n_steps: int = None,
     seed: int = 0,
+    backend: str = "pallas",
+    use_cache: bool = False,
+) -> float:
+    """Fraction of thermal samples NOT switched by the end of the pulse.
+
+    Thin wrapper over the campaign engine: builds a single-point (V, pulse)
+    grid and reads the WER surface.  ``use_cache=True`` makes repeated
+    margin queries (e.g. the IMC write-margin solver) hit the on-disk
+    campaign cache.
+    """
+    # lazy import: campaign builds on core + kernels, so core must not
+    # import it at module scope
+    from repro.campaign.engine import run_campaign
+    from repro.campaign.grid import CampaignGrid
+
+    pulse = float(pulse_s if n_steps is None else n_steps * dt)
+    grid = CampaignGrid(voltages=(float(voltage),), pulse_widths=(pulse,),
+                        temperatures=(p.temperature,), n_samples=n_samples,
+                        dt=dt, seed=seed)
+    res = run_campaign(p, grid, backend=backend, use_cache=use_cache)
+    return float(res.wer_surface()[0, 0, 0])
+
+
+@partial(jax.jit, static_argnames=("p", "pulse_s", "n_steps", "n_samples", "dt"))
+def write_error_rate_scan(
+    p: DeviceParams,
+    voltage: float,
+    pulse_s: float,
+    n_samples: int = 64,
+    dt: float = 0.1e-12,
+    n_steps: int = None,
+    seed: int = 0,
 ):
-    """Fraction of thermal samples NOT switched by the end of the pulse."""
+    """Reference scan path: per-sample vmap over a scan-over-steps with
+    ``jax.random`` (threefry) thermal draws.  O(steps) sequential work per
+    sample and ~20x the RNG flops of the kernel's counter-RNG — kept as the
+    baseline the campaign engine is measured against, and as an
+    independently-seeded cross-check of the WER statistics."""
     n_steps = int(pulse_s / dt) if n_steps is None else n_steps
     sigma = thermal_sigma(p, dt)
     keys = jax.random.split(jax.random.PRNGKey(seed), n_samples)

@@ -6,8 +6,10 @@
               img-threshold, mac, mat_add, rmse)
   evaluate  — system-level latency/energy vs the CPU baseline (Fig. 4)
   mapping   — beyond-paper: mapping LM-architecture inference onto the IMC
+  write_margin — WER-targeted write-pulse sizing via the campaign engine
 """
 from repro.imc.hierarchy import IMCHierarchy, build_hierarchy  # noqa: F401
 from repro.imc.cpu_model import CPUModel, CORTEX_A72  # noqa: F401
 from repro.imc.workloads import WORKLOADS, Workload  # noqa: F401
 from repro.imc.evaluate import evaluate_system, SystemResult  # noqa: F401
+from repro.imc.write_margin import wer_margined_pulse  # noqa: F401

@@ -73,8 +73,11 @@ def evaluate_workload(
     return SystemResult(w.name, t_cpu, e_cpu, t_imc, e_imc)
 
 
-def evaluate_system(kind: str = "afmtj", v_write: float = 1.0) -> Dict[str, SystemResult]:
-    hier = build_hierarchy(kind, v_write=v_write)
+def evaluate_system(kind: str = "afmtj", v_write: float = 1.0,
+                    wer_target: float | None = None) -> Dict[str, SystemResult]:
+    """``wer_target`` (e.g. 1e-2) sizes write pulses from the thermal-tail
+    Monte-Carlo campaign instead of the mean switching time."""
+    hier = build_hierarchy(kind, v_write=v_write, wer_target=wer_target)
     return {name: evaluate_workload(w, hier) for name, w in WORKLOADS.items()}
 
 

@@ -63,13 +63,21 @@ class IMCHierarchy:
         return self.levels["MM"]
 
 
-def build_hierarchy(kind: Literal["afmtj", "mtj"], v_write: float = 1.0) -> IMCHierarchy:
+def build_hierarchy(
+    kind: Literal["afmtj", "mtj"],
+    v_write: float = 1.0,
+    wer_target: float | None = None,
+) -> IMCHierarchy:
+    """``wer_target`` switches write-pulse sizing from the mean switching
+    time to a thermal-tail (Monte-Carlo campaign) margin — see
+    ``imc.write_margin``.  None keeps the seed deterministic timing."""
     levels = {}
     for spec in LEVELS:
         bl = BitlineParams(
             c_per_cell=0.03e-15 * spec.c_per_cell_scale,
             rows=spec.rows,
         )
-        sub = make_subarray(kind, rows=spec.rows, cols=spec.cols, v_write=v_write, bl=bl)
+        sub = make_subarray(kind, rows=spec.rows, cols=spec.cols,
+                            v_write=v_write, bl=bl, wer_target=wer_target)
         levels[spec.name] = IMCLevel(spec=spec, timings=sub.timings)
     return IMCHierarchy(kind=kind, levels=levels)

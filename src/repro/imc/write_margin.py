@@ -1,0 +1,80 @@
+"""WER-margined write pulses — the campaign engine's IMC client.
+
+The seed model sized the array write pulse from the *mean* deterministic
+switching time (``simulate_write`` x a 2% margin).  That is optimistic: at
+300 K the thermal tail of the switching-time distribution is what sets the
+pulse a pipelined controller must schedule (paper Sec. III-B — writes hide
+behind logic ops only if the pulse actually covers the tail).  This module
+turns a write-error-rate target into a pulse width by querying a thermal
+Monte-Carlo campaign over a pulse ladder, and feeds it to the subarray
+timing model (``circuit.subarray.make_subarray(..., wer_target=...)``).
+
+Campaign results are cached on disk (content-keyed), so hierarchy builds
+after the first pay only the cache read.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+from repro.core.params import AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams
+
+# Pulse ladders bracketing each device's thermal switching tail; the solver
+# returns the smallest rung with WER <= target, so rung spacing is the
+# pulse-width quantization of the margin (controller clock granularity).
+_LADDERS = {
+    "afmtj": tuple(x * 1e-12 for x in (120, 160, 200, 250, 300, 400, 600)),
+    "mtj": tuple(x * 1e-12 for x in (800, 1200, 1600, 2200, 3000, 4500, 6000)),
+}
+_DT = {"afmtj": 0.1e-12, "mtj": 0.2e-12}
+
+
+def _params_for(kind: str) -> DeviceParams:
+    return AFMTJ_PARAMS if kind == "afmtj" else MTJ_PARAMS
+
+
+@functools.lru_cache(maxsize=None)
+def wer_margined_pulse(
+    kind: str,
+    v_write: float = 1.0,
+    wer_target: float = 1e-2,
+    n_samples: int = 128,
+    seed: int = 0,
+    use_cache: bool = True,
+    ladder: Optional[Tuple[float, ...]] = None,
+) -> float:
+    """Smallest ladder pulse [s] with WER <= ``wer_target`` at ``v_write``.
+
+    AFMTJ: one campaign covers the whole ladder (the pulse axis is free —
+    see ``campaign.grid``).  MTJ: the campaign kernel is dual-sublattice
+    only, so the single-FM device walks the ladder through the
+    ``write_error_rate_scan`` path instead — correct physics, but one
+    integration per rung (minutes cold; in-process lru-cached).  Resolution
+    of the WER estimate is 1/n_samples either way, so ask for more samples
+    when targeting rates below ~1e-2.  Raises ValueError when no ladder
+    rung meets the target.
+    """
+    p = _params_for(kind)
+    pulses = ladder or _LADDERS[kind]
+
+    if p.n_sublattices != 2:
+        from repro.core.montecarlo import write_error_rate_scan
+
+        for pulse in sorted(pulses):
+            w = float(write_error_rate_scan(p, float(v_write), float(pulse),
+                                            n_samples=n_samples, dt=_DT[kind],
+                                            seed=seed))
+            if w <= wer_target:
+                return float(pulse)
+        raise ValueError(
+            f"no {kind} ladder pulse meets WER<={wer_target:g} at "
+            f"{v_write} V; widen the ladder or raise the voltage")
+
+    from repro.campaign.engine import run_campaign
+    from repro.campaign.grid import CampaignGrid
+
+    grid = CampaignGrid(voltages=(float(v_write),), pulse_widths=pulses,
+                        temperatures=(p.temperature,), n_samples=n_samples,
+                        dt=_DT[kind], seed=seed)
+    res = run_campaign(p, grid, use_cache=use_cache)
+    return res.pulse_for_wer(wer_target, t_index=0, v_index=0)

@@ -14,10 +14,17 @@ cell of a subarray (and every Monte-Carlo sample) — restructured for TPU:
 * Device constants (gamma, alpha, B_E, B_k, RK4 dt, transport constants for
   the self-consistent a_J(theta) drive) are closed over as compile-time
   scalars — they are fixed per simulation campaign.
+* Optional thermal field (``thermal_sigma > 0``): Brown's Langevin term,
+  sampled per step per sublattice component from the stateless counter-based
+  generator in ``kernels/noise.py``.  Each lane carries its own uint32
+  stream seed (second input row-vector), so every cell of a packed campaign
+  tile is an independent thermal sample — this is what lets the campaign
+  engine run a whole (voltage x sample) Monte-Carlo grid in one launch.
 
 Hardware adaptation note (DESIGN.md §2): this replaces the scalar SPICE
 inner loop; the physics is bit-identical to ``repro.core`` (ref.py is the
-pure-jnp oracle and tests sweep shapes/dtypes against it).
+pure-jnp oracle and tests sweep shapes/dtypes against it, including the
+thermal stream at a fixed seed).
 """
 from __future__ import annotations
 
@@ -28,13 +35,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.params import GAMMA, DeviceParams
+from repro.kernels import noise
 
 CELL_TILE = 512
 ROWS = 8
 
 
-def _rhs(m1, m2, aj, p: DeviceParams):
-    """Vectorized dual-sublattice LLG RHS on (3, n) component stacks."""
+def _rhs(m1, m2, aj, p: DeviceParams, bth1=None, bth2=None):
+    """Vectorized dual-sublattice LLG RHS on (3, n) component stacks.
+
+    ``bth1``/``bth2``: optional per-sublattice thermal field component
+    triples [T], added to the deterministic effective field (Brown's
+    Langevin term, held constant across the RK4 substages of one step —
+    same convention as ``core.montecarlo``).
+    """
     alpha, be, bk, beta = p.alpha, p.b_exchange, p.b_aniso, p.beta_flt
 
     def cross(a, b):
@@ -44,9 +58,11 @@ def _rhs(m1, m2, aj, p: DeviceParams):
             a[0] * b[1] - a[1] * b[0],
         )
 
-    def one(m, mo, sign):
-        # B_eff = B_k m_z z_hat - B_E m_other
+    def one(m, mo, sign, bth):
+        # B_eff = B_k m_z z_hat - B_E m_other (+ B_thermal)
         b = (-be * mo[0], -be * mo[1], bk * m[2] - be * mo[2])
+        if bth is not None:
+            b = tuple(bc + tc for bc, tc in zip(b, bth))
         # p_i = sign * z_hat (staggered Neel STT)
         pvec = (jnp.zeros_like(m[0]), jnp.zeros_like(m[0]),
                 jnp.full_like(m[0], sign))
@@ -59,8 +75,8 @@ def _rhs(m1, m2, aj, p: DeviceParams):
         mxt = cross(m, t)
         return tuple((a + alpha * b_) / (1.0 + alpha**2) for a, b_ in zip(t, mxt))
 
-    d1 = one(m1, m2, 1.0)
-    d2 = one(m2, m1, -1.0)
+    d1 = one(m1, m2, 1.0, bth1)
+    d2 = one(m2, m1, -1.0, bth2)
     return d1, d2
 
 
@@ -77,21 +93,25 @@ def _aj_from_v(v, nz, p: DeviceParams):
     return p.stt_prefactor * v * g / p.area
 
 
-def _llg_kernel(state_ref, out_ref, *, p: DeviceParams, dt: float,
-                n_steps: int, switch_threshold: float):
-    s = state_ref[...]
-    m1 = (s[0], s[1], s[2])
-    m2 = (s[3], s[4], s[5])
-    v = s[6]
-    crossed = jnp.full_like(v, float(n_steps))  # first-crossing step (f32)
+def _make_body(p: DeviceParams, dt: float, n_steps: int,
+               switch_threshold: float, sigma: float, seeds, v):
+    """Build the fori_loop body; ``seeds`` is None for the deterministic
+    path (keeps the compiled graph identical to the pre-thermal kernel)."""
 
     def body(i, carry):
         m1, m2, crossed = carry
         nz = 0.5 * (m1[2] - m2[2])
         aj = _aj_from_v(v, nz, p)
 
+        if seeds is not None:
+            d1, d2 = noise.thermal_draws(seeds, i)
+            bth1 = tuple(sigma * c for c in d1)
+            bth2 = tuple(sigma * c for c in d2)
+        else:
+            bth1 = bth2 = None
+
         def f(m1, m2):
-            return _rhs(m1, m2, aj, p)
+            return _rhs(m1, m2, aj, p, bth1, bth2)
 
         k1a, k1b = f(m1, m2)
         m1h = tuple(a + 0.5 * dt * k for a, k in zip(m1, k1a))
@@ -118,6 +138,34 @@ def _llg_kernel(state_ref, out_ref, *, p: DeviceParams, dt: float,
         crossed = jnp.where(newly, jnp.float32(i + 1), crossed)
         return m1n, m2n, crossed
 
+    return body
+
+
+def _llg_kernel(state_ref, out_ref, *, p: DeviceParams, dt: float,
+                n_steps: int, switch_threshold: float):
+    s = state_ref[...]
+    m1 = (s[0], s[1], s[2])
+    m2 = (s[3], s[4], s[5])
+    v = s[6]
+    crossed = jnp.full_like(v, float(n_steps))  # first-crossing step (f32)
+
+    body = _make_body(p, dt, n_steps, switch_threshold, 0.0, None, v)
+    m1, m2, crossed = jax.lax.fori_loop(0, n_steps, body, (m1, m2, crossed))
+    out = jnp.stack([m1[0], m1[1], m1[2], m2[0], m2[1], m2[2], v, crossed])
+    out_ref[...] = out
+
+
+def _llg_thermal_kernel(state_ref, seeds_ref, out_ref, *, p: DeviceParams,
+                        dt: float, n_steps: int, switch_threshold: float,
+                        sigma: float):
+    s = state_ref[...]
+    m1 = (s[0], s[1], s[2])
+    m2 = (s[3], s[4], s[5])
+    v = s[6]
+    seeds = seeds_ref[0]
+    crossed = jnp.full_like(v, float(n_steps))
+
+    body = _make_body(p, dt, n_steps, switch_threshold, sigma, seeds, v)
     m1, m2, crossed = jax.lax.fori_loop(0, n_steps, body, (m1, m2, crossed))
     out = jnp.stack([m1[0], m1[1], m1[2], m2[0], m2[1], m2[2], v, crossed])
     out_ref[...] = out
@@ -130,9 +178,31 @@ def llg_rk4_pallas(
     n_steps: int,
     switch_threshold: float = 0.9,
     interpret: bool = False,
+    thermal_sigma: float = 0.0,
+    seeds: jnp.ndarray | None = None,   # (cells,) or (1, cells) uint32
 ) -> jnp.ndarray:
     rows, cells = state.shape
     assert rows == ROWS and cells % CELL_TILE == 0, state.shape
+
+    if thermal_sigma > 0.0:
+        assert seeds is not None, "thermal path needs per-cell stream seeds"
+        seeds = seeds.reshape(1, cells).astype(jnp.uint32)
+        kern = functools.partial(
+            _llg_thermal_kernel, p=p, dt=dt, n_steps=n_steps,
+            switch_threshold=switch_threshold, sigma=float(thermal_sigma),
+        )
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((ROWS, cells), jnp.float32),
+            grid=(cells // CELL_TILE,),
+            in_specs=[
+                pl.BlockSpec((ROWS, CELL_TILE), lambda i: (0, i)),
+                pl.BlockSpec((1, CELL_TILE), lambda i: (0, i)),
+            ],
+            out_specs=pl.BlockSpec((ROWS, CELL_TILE), lambda i: (0, i)),
+            interpret=interpret,
+        )(state, seeds)
+
     kern = functools.partial(
         _llg_kernel, p=p, dt=dt, n_steps=n_steps,
         switch_threshold=switch_threshold,

@@ -30,8 +30,23 @@ def llg_rk4(state, p: DeviceParams, dt: float, n_steps: int,
                           interpret=_default_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "p", "dt", "n_steps", "switch_threshold", "thermal_sigma"))
+def llg_rk4_thermal(state, seeds, p: DeviceParams, dt: float, n_steps: int,
+                    thermal_sigma: float, switch_threshold: float = 0.9):
+    """Thermal (Langevin) variant: per-cell counter-RNG streams in ``seeds``
+    ((cells,) uint32, see kernels/noise.cell_seeds).  Brown's sigma is a
+    compile-time scalar — fixed per (device, temperature, dt) campaign."""
+    return llg_rk4_pallas(state, p, dt, n_steps, switch_threshold,
+                          interpret=_default_interpret(),
+                          thermal_sigma=thermal_sigma, seeds=seeds)
+
+
 def pack_states(m0: jnp.ndarray, voltages: jnp.ndarray) -> jnp.ndarray:
     """(cells, 2, 3) initial states + (cells,) drives -> (8, cells) SoA."""
+    assert m0.ndim == 3 and m0.shape[1] == 2, (
+        f"SoA layout is dual-sublattice (AFMTJ) only, got {m0.shape}; "
+        "single-sublattice MTJ states must use the repro.core scan paths")
     cells = m0.shape[0]
     pad = (-cells) % CELL_TILE
     m0 = jnp.pad(m0, ((0, pad), (0, 0), (0, 0)))

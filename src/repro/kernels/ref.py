@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.core import llg, tmr
 from repro.core.integrator import rk4_step
 from repro.core.params import DeviceParams
+from repro.kernels import noise
 
 
 def ref_llg_rk4(
@@ -20,19 +21,33 @@ def ref_llg_rk4(
     dt: float,
     n_steps: int,
     switch_threshold: float = 0.9,
+    thermal_sigma: float = 0.0,
+    seeds: jnp.ndarray | None = None,   # (cells,) uint32 per-lane streams
 ) -> jnp.ndarray:
     cells = state.shape[1]
     m = jnp.stack(
         [state[0:3].T, state[3:6].T], axis=1
     )                              # (cells, 2, 3)
     v = state[6]
+    if thermal_sigma > 0.0:
+        assert seeds is not None, "thermal path needs per-cell stream seeds"
+        seeds = seeds.reshape(cells).astype(jnp.uint32)
 
     def body(carry, i):
         m, crossed = carry
         nz = llg.order_parameter_z(m)
         g = tmr.conductance_from_cos(nz, p)
         aj = p.stt_prefactor * v * g / p.area
-        m_next = rk4_step(lambda mm, tt: llg.llg_rhs(mm, p, aj, None), m, 0.0, dt)
+        if thermal_sigma > 0.0:
+            # identical stream to the Pallas kernel: (cells, 2, 3) field from
+            # the same per-lane counters (see kernels/noise.py)
+            d1, d2 = noise.thermal_draws(seeds, i)
+            b_th = thermal_sigma * jnp.stack(
+                [jnp.stack(d1, axis=-1), jnp.stack(d2, axis=-1)], axis=1
+            )
+        else:
+            b_th = None
+        m_next = rk4_step(lambda mm, tt: llg.llg_rhs(mm, p, aj, b_th), m, 0.0, dt)
         nz_new = llg.order_parameter_z(m_next)
         newly = (nz_new < -switch_threshold) & (crossed >= float(n_steps))
         crossed = jnp.where(newly, (i + 1).astype(jnp.float32), crossed)

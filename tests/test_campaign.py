@@ -1,0 +1,211 @@
+"""Campaign engine tests: thermal kernel parity, WER physics, caching."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.campaign import (CampaignGrid, brown_sigma, pack_plane,
+                            run_campaign, run_ensemble)
+from repro.core import llg
+from repro.core.params import AFMTJ_PARAMS
+from repro.kernels import noise, ops, ref
+
+
+# ------------------------------------------------------------ noise streams
+def test_noise_stream_statistics():
+    """Counter-RNG normals: ~N(0,1), decorrelated across lanes and steps."""
+    seeds = noise.cell_seeds(0, 2048)
+    zs = []
+    for step in range(8):                       # 8 x 6 x 2048 ~ 100k draws
+        d1, d2 = noise.thermal_draws(seeds, jnp.int32(step))
+        zs.append(np.stack([np.asarray(c) for c in d1 + d2]))
+    z = np.stack(zs)
+    assert abs(z.mean()) < 0.015                # ~5 sigma of the MC error
+    assert abs(z.std() - 1.0) < 0.02
+    # consecutive steps must decorrelate
+    r = np.corrcoef(z[0, 0], z[1, 0])[0, 1]
+    assert abs(r) < 0.1
+
+
+def test_noise_stream_deterministic():
+    seeds = noise.cell_seeds(7, 512)
+    a, _ = noise.thermal_draws(seeds, jnp.int32(11))
+    b, _ = noise.thermal_draws(seeds, jnp.int32(11))
+    assert all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
+# ---------------------------------------------------- kernel-vs-oracle parity
+def _states(cells, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    th = jax.random.uniform(k1, (cells,), minval=0.05, maxval=0.25)
+    ph = jax.random.uniform(k2, (cells,), minval=0.0, maxval=6.28)
+    m0 = jax.vmap(lambda t, f: llg.initial_state(AFMTJ_PARAMS, t, f))(th, ph)
+    return ops.pack_states(m0, jnp.linspace(0.3, 1.2, cells))
+
+
+@pytest.mark.parametrize("n_steps", [50, 200])
+def test_thermal_kernel_matches_ref_exact_stream(n_steps):
+    """Pallas-with-noise vs ref.py oracle at a fixed seed: the counter-RNG
+    is stateless, so both consume the *identical* thermal stream and the
+    trajectories must agree to float tolerance (not just statistically)."""
+    cells, dt = 512, 0.1e-12
+    state = _states(cells)
+    sigma = brown_sigma(AFMTJ_PARAMS, dt)
+    seeds = noise.cell_seeds(42, cells)
+    out_k = ops.llg_rk4_thermal(state, seeds, AFMTJ_PARAMS, dt, n_steps, sigma)
+    out_r = ref.ref_llg_rk4(state, AFMTJ_PARAMS, dt, n_steps,
+                            thermal_sigma=sigma, seeds=seeds)
+    np.testing.assert_allclose(np.asarray(out_k[:6]), np.asarray(out_r[:6]),
+                               atol=2e-5)
+    assert np.array_equal(np.asarray(out_k[7]), np.asarray(out_r[7]))
+
+
+def test_thermal_zero_sigma_reduces_to_deterministic():
+    state = _states(512, seed=2)
+    out_t = ops.llg_rk4_thermal(state, noise.cell_seeds(0, 512),
+                                AFMTJ_PARAMS, 0.1e-12, 100, 0.0)
+    out_d = ops.llg_rk4(state, AFMTJ_PARAMS, 0.1e-12, 100)
+    np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_d))
+
+
+def test_thermal_seeds_decorrelate_lanes():
+    """Same initial state on every lane + noise => lanes must diverge."""
+    m0 = jnp.broadcast_to(llg.initial_state(AFMTJ_PARAMS, 0.1, 0.3), (512, 2, 3))
+    state = ops.pack_states(m0, jnp.full((512,), 1.0))
+    sigma = brown_sigma(AFMTJ_PARAMS, 0.1e-12)
+    out = ops.llg_rk4_thermal(state, noise.cell_seeds(1, 512),
+                              AFMTJ_PARAMS, 0.1e-12, 200, sigma)
+    nz = np.asarray(0.5 * (out[2] - out[5]))
+    assert nz.std() > 1e-3
+
+
+# ------------------------------------------------------------- WER physics
+@pytest.fixture(scope="module")
+def campaign_result():
+    grid = CampaignGrid(voltages=(0.8, 1.0, 1.2),
+                        pulse_widths=(120e-12, 200e-12, 300e-12),
+                        n_samples=48, dt=0.1e-12, seed=0)
+    return run_campaign(AFMTJ_PARAMS, grid, use_cache=False)
+
+
+def test_wer_monotone_in_pulse_and_voltage(campaign_result):
+    """WER must be non-increasing along both the pulse and voltage axes."""
+    w = campaign_result.wer()                      # (n_V, n_P)
+    assert (np.diff(w, axis=1) <= 0).all(), f"not monotone in pulse:\n{w}"
+    assert (np.diff(w, axis=0) <= 1e-9).all(), f"not monotone in voltage:\n{w}"
+    # end-member sanity: strong long pulse writes reliably, weak short doesn't
+    assert w[-1, -1] <= 0.05
+    assert w[0, 0] >= w[-1, -1]
+
+
+def test_wer_counts_unswitched_at_longest_pulse():
+    """Regression: the never-crossed sentinel must exceed every grid pulse,
+    or unswitched lanes are miscounted as successful writes at the longest
+    pulse (WER 0.0 where the scan oracle says ~0.5)."""
+    grid = CampaignGrid(voltages=(0.6,), pulse_widths=(250e-12,),
+                        n_samples=32, dt=0.1e-12, seed=0)
+    assert grid.n_steps * grid.dt > max(grid.pulse_widths)
+    res = run_campaign(AFMTJ_PARAMS, grid, use_cache=False)
+    assert res.wer()[0, -1] > 0.1, res.wer()
+
+
+def test_pulse_for_wer_raises_when_unreachable():
+    from repro.campaign import CampaignResult
+    grid = CampaignGrid(voltages=(0.5,), pulse_widths=(50e-12,),
+                        n_samples=4, dt=0.1e-12)
+    never = np.full((1, 1, 4), grid.n_steps * grid.dt)   # nobody switched
+    res = CampaignResult(grid=grid, backend="pallas", crossing_time=never,
+                         elapsed_s=0.0)
+    with pytest.raises(ValueError, match="widen"):
+        res.pulse_for_wer(1e-2)
+
+
+def test_pack_states_rejects_single_sublattice():
+    from repro.core.params import MTJ_PARAMS
+    m0 = jax.vmap(lambda t: llg.initial_state(MTJ_PARAMS, t, 0.1))(
+        jnp.linspace(0.01, 0.2, 8))
+    with pytest.raises(AssertionError, match="dual-sublattice"):
+        ops.pack_states(m0, jnp.ones(8))
+
+
+def test_wer_pulse_axis_is_postprocessing(campaign_result):
+    """WER at the longest grid pulse == fraction not crossed by then."""
+    ct = campaign_result.crossing_time[0]          # (n_V, n_S) at T0
+    pulse = campaign_result.grid.pulse_widths[-1]
+    expect = (ct > pulse).mean(axis=-1)
+    np.testing.assert_allclose(campaign_result.wer()[:, -1], expect)
+
+
+def test_latency_percentiles(campaign_result):
+    lp = campaign_result.latency_percentiles((50.0, 99.0))
+    ok = ~np.isnan(lp)
+    assert ok.any()
+    # p99 >= p50 wherever defined; higher voltage switches faster at p50
+    assert (lp[..., 1][ok[..., 1]] >= lp[..., 0][ok[..., 0]]).all()
+    p50 = lp[0, :, 0]
+    assert p50[-1] <= p50[0]
+
+
+def test_engine_agrees_with_scan_statistics():
+    """Two independent RNG implementations of the same physics must agree
+    on WER within Monte-Carlo error."""
+    from repro.core.montecarlo import write_error_rate, write_error_rate_scan
+    pulse, n = 200e-12, 64
+    w_engine = write_error_rate(AFMTJ_PARAMS, 1.0, pulse, n_samples=n)
+    w_scan = float(write_error_rate_scan(AFMTJ_PARAMS, 1.0, pulse, n_samples=n))
+    # binomial std at p~0.1, n=64 is ~0.04; allow 3 sigma both ways
+    assert abs(w_engine - w_scan) < 0.15, (w_engine, w_scan)
+
+
+# ------------------------------------------------------------------ caching
+def test_campaign_cache_roundtrip(tmp_path):
+    grid = CampaignGrid(voltages=(1.0,), pulse_widths=(60e-12,),
+                        n_samples=8, dt=0.1e-12, seed=3)
+    r1 = run_campaign(AFMTJ_PARAMS, grid, cache_dir=str(tmp_path))
+    assert not r1.from_cache
+    r2 = run_campaign(AFMTJ_PARAMS, grid, cache_dir=str(tmp_path))
+    assert r2.from_cache and r2.elapsed_s == 0.0
+    np.testing.assert_array_equal(r1.crossing_time, r2.crossing_time)
+    # any input change must miss: different device params -> new key
+    p2 = dataclasses.replace(AFMTJ_PARAMS, alpha=0.02)
+    r3 = run_campaign(p2, grid, cache_dir=str(tmp_path))
+    assert not r3.from_cache
+
+
+def test_campaign_cache_corrupt_entry_is_miss(tmp_path):
+    from repro.campaign.cache import campaign_key
+    grid = CampaignGrid(voltages=(1.0,), pulse_widths=(60e-12,),
+                        n_samples=8, dt=0.1e-12, seed=4)
+    key = campaign_key(AFMTJ_PARAMS, grid, "pallas")
+    (tmp_path / f"{key}.npz").write_bytes(b"not an npz")
+    r = run_campaign(AFMTJ_PARAMS, grid, cache_dir=str(tmp_path))
+    assert not r.from_cache           # corrupt entry read as miss, re-run
+
+
+# ------------------------------------------------------------- grid/packing
+def test_pack_plane_layout():
+    grid = CampaignGrid(voltages=(0.5, 1.0), pulse_widths=(100e-12,),
+                        n_samples=10, dt=0.1e-12)
+    state, seeds = pack_plane(grid, AFMTJ_PARAMS, 0)
+    assert state.shape[0] == 8 and state.shape[1] % 512 == 0
+    assert seeds.shape == (state.shape[1],) and seeds.dtype == jnp.uint32
+    # voltage row: sample s of voltage i at lane i*n_samples + s
+    v = np.asarray(state[6, :grid.cells])
+    np.testing.assert_allclose(v, np.repeat([0.5, 1.0], 10), rtol=1e-6)
+    # all real lanes hold unit-norm antiparallel sublattice pairs
+    m1 = np.asarray(state[0:3, :grid.cells])
+    np.testing.assert_allclose(np.linalg.norm(m1, axis=0), 1.0, atol=1e-6)
+
+
+def test_run_ensemble_per_cell_voltages():
+    """The general entry point (array_mc_sim path): per-cell drives."""
+    n = 100
+    m0 = jax.vmap(lambda t: llg.initial_state(AFMTJ_PARAMS, t, 0.2))(
+        jnp.linspace(0.05, 0.15, n))
+    v = jnp.linspace(0.9, 1.1, n)
+    res = run_ensemble(AFMTJ_PARAMS, m0, v, 0.1e-12, 300, seed=0)
+    assert res.crossing_steps.shape == (n,)
+    assert res.switched.dtype == bool
