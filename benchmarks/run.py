@@ -9,8 +9,13 @@ modeled-vs-paper comparison where the paper reports numbers.
   validation — Sec. II-A validation (TMR ~80%, ps switching, threshold)
   archmap    — beyond-paper: 10 LM archs mapped onto the IMC hierarchy
   kernels    — Pallas kernel microbenches (interpret mode) vs jnp oracle
+  mvm        — functional analog MVM (bitline/XNOR kernels) vs jnp einsum
+  wer        — campaign-engine WER surface vs the per-sample scan path
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+``--smoke`` shrinks shapes and skips steady-state warmups so CI can exercise
+kernel-vs-reference parity on every push (currently honored by ``mvm``).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
 """
 from __future__ import annotations
 
@@ -20,6 +25,8 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+SMOKE = False   # set by --smoke in main()
 
 
 def _t(fn, *a, **k):
@@ -179,6 +186,64 @@ def bench_kernels():
           f"match={int(bool(jnp.allclose(o3, o4)))}")
 
 
+def bench_mvm():
+    """Functional analog MVM: the Pallas bitline/XNOR read path vs a jnp
+    einsum baseline — throughput plus kernel-vs-reference parity and output
+    error vs the f32 matmul (the accuracy the closed-form model can't see).
+
+    Shapes are deliberately NOT 128-multiples so the padding path is always
+    exercised."""
+    from repro.imc.analog_pipeline import (AnalogConfig, analog_matmul,
+                                           binary_matmul, program_weights)
+    from repro.kernels import ref
+    from repro.kernels.xnor_gemm import binarize_acc
+
+    m, k, n = (48, 200, 144) if SMOKE else (256, 1000, 520)
+    print(f"# mvm: analog read path {m}x{k}x{n} "
+          f"({'smoke' if SMOKE else 'full'}; pallas interpret on CPU)")
+    print("name,us_per_call,derived")
+    kw, kx = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(kw, (k, n), jnp.float32) / (k ** 0.5)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    y_f32 = np.asarray(x @ w)
+
+    cfg = AnalogConfig(adc_bits=6)
+    arr = program_weights(w, "afmtj", cfg)
+    einsum = jax.jit(lambda a, b: jnp.einsum("mk,kn->mn", a, b))
+    if not SMOKE:   # steady-state: warm both compiles out of the timings
+        analog_matmul(arr, x).block_until_ready()
+        einsum(x, w).block_until_ready()
+    y_a, us_a = _t(analog_matmul, arr, x)
+    mse = float(np.mean((np.asarray(y_a) - y_f32) ** 2))
+    print(f"mvm.analog.adc6,{us_a:.0f},nmse={mse/np.mean(y_f32**2):.2e}")
+
+    # parity: the kernel output must match the jnp oracle on the exact
+    # operands analog_matmul fed the kernel
+    from repro.imc.analog_pipeline import kernel_operands
+    from repro.kernels.ops import bitline_mac
+    v, i_max, _ = kernel_operands(arr, x)
+    ok = np.allclose(np.asarray(bitline_mac(v, arr.g_diff, 6, i_max=i_max)),
+                     np.asarray(ref.ref_bitline_mac(v, arr.g_diff, 6,
+                                                    i_max=i_max)),
+                     rtol=1e-5, atol=i_max / 31 * 1.001)
+    print(f"mvm.analog.kernel_vs_ref,0,match={int(ok)}")
+
+    (y_e, us_e) = _t(einsum, x, w)
+    print(f"mvm.einsum_f32,{us_e:.0f},baseline")
+    print(f"mvm.analog_over_einsum,0,{us_a/max(us_e,1e-9):.1f}")
+
+    y_b, us_b = _t(binary_matmul, x, w)
+    mse_b = float(np.mean((np.asarray(y_b) - y_f32) ** 2))
+    print(f"mvm.bnn.xnor,{us_b:.0f},nmse={mse_b/np.mean(y_f32**2):.2e}")
+    from repro.kernels.ops import xnor_gemm
+    xb, wb = binarize_acc(x, 1), binarize_acc(w, 1)
+    ok_b = np.array_equal(np.asarray(xnor_gemm(xb, wb)),
+                          np.asarray(ref.ref_xnor_gemm(xb, wb)))
+    print(f"mvm.bnn.kernel_vs_ref,0,match={int(ok_b)}")
+    print("# analog path adds programming+ADC on top of the matmul; on TPU "
+          "the kernel runs compiled (interpret-mode timings are CPU-only)")
+
+
 def bench_wer():
     """Campaign engine: WER(voltage, pulse) surface through the Pallas
     thermal kernel, vs the per-sample scan path in core/montecarlo.py —
@@ -254,14 +319,19 @@ BENCHES = {
     "validation": bench_validation,
     "archmap": bench_archmap,
     "kernels": bench_kernels,
+    "mvm": bench_mvm,
     "wer": bench_wer,
 }
 
 
 def main() -> None:
+    global SMOKE
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(BENCHES), default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes, no steady-state warmup (CI parity run)")
     args = ap.parse_args()
+    SMOKE = args.smoke
     names = [args.only] if args.only else list(BENCHES)
     t0 = time.time()
     for n in names:

@@ -1,0 +1,50 @@
+"""Analog read-path accuracy sweep: output error of real decode-step GEMVs
+run through the Pallas bitline kernel, across ADC resolution and device TMR.
+
+For each arch the decode-dominant projection (d_model -> FFN fan-out, capped
+for interpret-mode CPU runs) is programmed into a differential AFMTJ
+crossbar (``imc.analog_pipeline``) and driven with signed activations; the
+table reports MSE / normalized MSE / cosine vs the f32 matmul — the paper's
+accuracy-under-nonideality axis (TMR ratio, IR drop, ADC resolution) that
+the closed-form latency/energy model (``examples/imc_case_study.py``)
+cannot see.  The 1-bit XNOR row is the *bnn*-mode floor for comparison.
+
+    PYTHONPATH=src python examples/analog_accuracy.py
+"""
+from repro.configs.registry import ARCHS
+from repro.imc.analog_pipeline import AnalogConfig
+from repro.imc.mapping import (accuracy_surface, decode_projection_accuracy,
+                               decode_projection_shapes)
+
+SWEEP_ARCHS = ("gemma2-2b", "qwen3-8b", "mamba2-780m")
+ADC_BITS = (4, 6, 8)
+TMRS = (0.8, 5.0)       # validated ~80% and the theoretical-limit regime
+G_SIGMA = 0.05          # 5% lognormal device-to-device variation
+CAPS = dict(cap_k=384, cap_n=256, batch=8)
+
+
+def main():
+    print("=== Analog MVM accuracy vs ADC bits x TMR "
+          f"(g_sigma={G_SIGMA}, IR drop on) ===\n")
+    for name in SWEEP_ARCHS:
+        cfg = ARCHS[name]
+        k, n = decode_projection_shapes(cfg, CAPS["cap_k"], CAPS["cap_n"])
+        print(f"--- {name}  (decode GEMV {CAPS['batch']}x{k}x{n})")
+        print(f"  {'adc_bits':>8} {'tmr':>5} {'mse':>10} {'nmse':>10} "
+              f"{'cosine':>8}")
+        surf = accuracy_surface(cfg, kind="afmtj", adc_bits=ADC_BITS,
+                                tmrs=TMRS, g_sigma=G_SIGMA, **CAPS)
+        for (bits, tmr), r in sorted(surf.items()):
+            print(f"  {bits:8d} {tmr:5.1f} {r.mse:10.2e} {r.nmse:10.2e} "
+                  f"{r.cosine:8.5f}")
+        bnn = decode_projection_accuracy(cfg, kind="afmtj", mode="bnn", **CAPS)
+        print(f"  {'bnn(1b)':>8} {'-':>5} {bnn.mse:10.2e} {bnn.nmse:10.2e} "
+              f"{bnn.cosine:8.5f}\n")
+    print("reading the surface: nmse falls with adc_bits until the IR-drop /"
+          "\nvariation floor; higher TMR widens the conductance span, so the"
+          "\nsame variation costs relatively less.  The bnn row is the 1-bit"
+          "\nquantization floor the paper's XNOR mode accepts for 8x density.")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,7 @@ class BitlineParams:
     c_fixed: float = 2.0e-15       # SA input + periphery capacitance [F]
     r_access: float = 1.0e3        # access transistor on-resistance [Ohm]
     r_driver: float = 200.0        # write-driver output resistance [Ohm]
+    r_wire_per_cell: float = 0.5   # bit-line wire resistance per row segment [Ohm]
     t_wl_setup: float = 20e-12     # word-line decode/assert overhead [s]
     v_precharge: float = 1.0       # precharge level [V]
     v_read: float = 0.1            # read voltage across the cell [V]
@@ -80,6 +81,27 @@ def multi_row_current(
     g_cells = jnp.where(bits > 0, g_p, g_ap)
     g_eff = cell_conductance(g_cells, bl)
     return bl.v_read * jnp.sum(g_eff, axis=-1)
+
+
+def column_ir_drop(g_column_total: jnp.ndarray, bl: BitlineParams) -> jnp.ndarray:
+    """Per-column IR-drop attenuation factor for multi-row analog MVM.
+
+    With every word line driven, the column's aggregate cell current flows
+    through the bit-line wire; lumping the distributed line as the average
+    cell seeing half the total wire resistance gives the classic one-segment
+    approximation
+
+        v_eff / v_drive = 1 / (1 + R_line * G_col),   R_line = r_wire * rows/2.
+
+    ``g_column_total`` is the summed *effective* cell conductance hanging off
+    the column (after ``cell_conductance``).  Heavily-loaded columns (more
+    low-resistance cells) attenuate more, which is what makes IR drop a
+    *column-dependent gain error* rather than a global scale: the mean factor
+    calibrates out (one-point ADC gain trim), the spread does not — see
+    ``imc.analog_pipeline``.
+    """
+    r_line = bl.r_wire_per_cell * bl.rows / 2.0
+    return 1.0 / (1.0 + r_line * g_column_total)
 
 
 def logic_current_levels(n_rows: int, dev: DeviceParams, bl: BitlineParams):

@@ -37,7 +37,8 @@ class SubarrayTimings:
     t_logic3: float          # 3-row (majority — the adder carry primitive)
     e_read_bit: float
     e_write_bit: float
-    e_logic_bit: float
+    e_logic_bit: float       # 2-row logic: two cells conduct per column
+    e_logic3_bit: float      # 3-row logic: three cells conduct per column
     rows: int
     cols: int
 
@@ -138,7 +139,10 @@ def make_subarray(
     t_logic3 = t_settle + _worst_case_logic_delay(3, dev, bl, sa)
 
     e_read = read_energy(dev, t_read=t_read, v_read=bl.v_read) + sa.e_per_sense
+    # k-row logic draws read current through k activated cells for the
+    # (slightly longer) k-row sense window
     e_logic = 2.0 * read_energy(dev, t_read=t_logic2, v_read=bl.v_read) + sa.e_per_sense
+    e_logic3 = 3.0 * read_energy(dev, t_read=t_logic3, v_read=bl.v_read) + sa.e_per_sense
 
     timings = SubarrayTimings(
         t_read=t_read,
@@ -148,6 +152,7 @@ def make_subarray(
         e_read_bit=e_read,
         e_write_bit=e_write,
         e_logic_bit=e_logic,
+        e_logic3_bit=e_logic3,
         rows=rows,
         cols=cols,
     )

@@ -7,9 +7,27 @@
   evaluate  — system-level latency/energy vs the CPU baseline (Fig. 4)
   mapping   — beyond-paper: mapping LM-architecture inference onto the IMC
   write_margin — WER-targeted write-pulse sizing via the campaign engine
+  analog_pipeline — functional analog MVM through the Pallas bitline/XNOR
+              kernels: conductance programming, IR drop, signed ADC
+              (DESIGN.md §6)
 """
 from repro.imc.hierarchy import IMCHierarchy, build_hierarchy  # noqa: F401
 from repro.imc.cpu_model import CPUModel, CORTEX_A72  # noqa: F401
 from repro.imc.workloads import WORKLOADS, Workload  # noqa: F401
 from repro.imc.evaluate import evaluate_system, SystemResult  # noqa: F401
 from repro.imc.write_margin import wer_margined_pulse  # noqa: F401
+
+# analog_pipeline re-exports are lazy (PEP 562): it pulls shard_map + Pallas,
+# which closed-form consumers (evaluate/mapping/fig4) must not pay for at
+# package-import time.
+_ANALOG_EXPORTS = ("AnalogConfig", "AccuracyReport", "ProgrammedArray",
+                   "analog_matmul", "binary_matmul", "mvm_accuracy",
+                   "program_weights", "kernel_operands")
+
+
+def __getattr__(name):
+    if name in _ANALOG_EXPORTS:
+        from repro.imc import analog_pipeline
+
+        return getattr(analog_pipeline, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -61,8 +61,10 @@ def evaluate_workload(
 
     # op counts are per *element*; each bit-serial op touches one bit-cell
     # per element, so cell energy = n_elems * count * per-bit energy.
+    # 3-row majority conducts through three cells (e_logic3_bit), not two.
     e_cells = w.n_elems * (
-        (w.logic2 + w.logic3) * tm.e_logic_bit
+        w.logic2 * tm.e_logic_bit
+        + w.logic3 * tm.e_logic3_bit
         + w.writes * tm.e_write_bit
         + w.reads * tm.e_read_bit
     )

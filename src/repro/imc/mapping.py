@@ -24,7 +24,7 @@ energy + per-row ADC/peripheral + activation writes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.imc.cpu_model import CORTEX_A72, CPUModel
@@ -34,6 +34,7 @@ XBAR = 512                      # crossbar dimension (MM-level subarrays)
 IMC_PARALLEL_ARRAYS = 1024      # arrays operating concurrently at MM (PiM)
 ADC_E_PER_COL = 2.0e-12         # 6-bit column ADC energy [J]
 ADC_T = 0.5e-9                  # per-tile conversion time (pipelined) [s]
+CELLS_PER_WEIGHT_8B = 8         # bit-sliced int8: one cell per weight bit
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +46,8 @@ class ArchMapResult:
     e_imc: float
     t_imc_bnn: float
     e_imc_bnn: float
+    tiles: float = 0.0           # XBAR^2 crossbar tiles, 8-bit mapping
+    tiles_bnn: float = 0.0       # tiles for the binarized (1 cell/weight) map
 
     @property
     def speedup(self):
@@ -65,26 +68,29 @@ def map_arch_decode(cfg: ArchConfig, hier: IMCHierarchy,
                 n * 0.125 / (cpu.ipc * cpu.freq_hz))        # SIMD MACs
     e_cpu = (n / cpu.line_bytes) * cpu.e_dram_line + n * 0.02e-12
 
-    # --- AFMTJ/MTJ crossbar: tiles of XBAR x XBAR MACs ----------------------
-    tiles = n / (XBAR * XBAR)
+    # --- AFMTJ/MTJ crossbar: tiles of XBAR x XBAR cells ---------------------
+    # 8-bit weights are bit-sliced over CELLS_PER_WEIGHT_8B cells, so the
+    # 8-bit map occupies 8x the cells (and reads 8 cells per weight MAC).
+    tiles = n * CELLS_PER_WEIGHT_8B / (XBAR * XBAR)
     waves = tiles / IMC_PARALLEL_ARRAYS                     # sequential waves
     t_tile = tm.t_read + ADC_T                              # analog GEMV + ADC
     # activation write-back: one XBAR-wide row per tile-column group
     t_wb = tm.t_write
     t_imc = waves * (t_tile + t_wb * 0.1)                   # writes pipelined
     e_mac = tm.e_read_bit                                   # per-cell read
-    e_imc = (n * e_mac
+    e_imc = (n * CELLS_PER_WEIGHT_8B * e_mac
              + tiles * XBAR * ADC_E_PER_COL                 # column ADCs
              + tiles * XBAR * tm.e_write_bit * 0.02)        # activation writes
 
-    # --- 1-bit (XNOR) variant: 8x denser tiles, no ADC (sense-amp sign) ----
-    tiles_b = tiles                                          # 1 cell / weight
+    # --- 1-bit (XNOR) variant: 1 cell/weight -> 8x fewer tiles, no ADC
+    # (sense-amp sign readout) ------------------------------------------------
+    tiles_b = n / (XBAR * XBAR)
     waves_b = tiles_b / IMC_PARALLEL_ARRAYS
     t_imc_bnn = waves_b * (tm.t_logic2 + tm.t_write * 0.1)
     e_imc_bnn = n * tm.e_logic_bit + tiles_b * XBAR * tm.e_write_bit * 0.02
 
     return ArchMapResult(cfg.name, t_cpu, e_cpu, t_imc, e_imc,
-                         t_imc_bnn, e_imc_bnn)
+                         t_imc_bnn, e_imc_bnn, tiles=tiles, tiles_bnn=tiles_b)
 
 
 def map_all(archs: Dict[str, ArchConfig]) -> Dict[str, Dict[str, ArchMapResult]]:
@@ -93,4 +99,77 @@ def map_all(archs: Dict[str, ArchConfig]) -> Dict[str, Dict[str, ArchMapResult]]
         hier = build_hierarchy(kind)
         out[kind] = {name: map_arch_decode(cfg, hier)
                      for name, cfg in archs.items()}
+    return out
+
+
+# --- functional read path: run the decode GEMV through the Pallas kernels ---
+#
+# The latency/energy model above is closed-form; the functions below actually
+# COMPUTE a decode-step projection through ``imc.analog_pipeline`` (bitline
+# MAC kernel + IR drop + signed ADC) and score the output against the f32
+# matmul — the accuracy axis of the paper's accuracy-vs-nonideality claim.
+
+def decode_projection_shapes(cfg: ArchConfig, cap_k: int = 512,
+                             cap_n: int = 512) -> Tuple[int, int]:
+    """The arch's decode-dominant GEMV (d_model -> FFN fan-out), capped so
+    interpret-mode Pallas sweeps stay tractable on CPU."""
+    k = min(cfg.d_model, cap_k)
+    n_full = cfg.d_ff if cfg.d_ff else 2 * cfg.d_model
+    if cfg.moe is not None:
+        n_full = cfg.moe.d_expert
+    return k, min(n_full, cap_n)
+
+
+def decode_projection_accuracy(
+    cfg: ArchConfig,
+    kind: str = "afmtj",
+    analog_cfg: Optional["AnalogConfig"] = None,
+    mode: str = "analog",
+    batch: int = 8,
+    cap_k: int = 512,
+    cap_n: int = 512,
+    seed: Optional[int] = None,
+    devices: Optional[int] = None,
+) -> "AccuracyReport":
+    """One real decode-step projection of ``cfg`` through the analog path.
+
+    ``seed=None`` derives the projection draw from the arch name, so two
+    archs whose capped shapes coincide still get distinct weights."""
+    import zlib
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.imc.analog_pipeline import AnalogConfig, mvm_accuracy
+
+    analog_cfg = analog_cfg or AnalogConfig()
+    k, n = decode_projection_shapes(cfg, cap_k, cap_n)
+    if seed is None:
+        seed = zlib.crc32(cfg.name.encode()) & 0x7FFFFFFF
+    kw, kx = jax.random.split(jax.random.PRNGKey(seed))
+    # init-scaled projection weights + unit-normal decode activations
+    w = jax.random.normal(kw, (k, n), jnp.float32) / (k ** 0.5)
+    x = jax.random.normal(kx, (batch, k), jnp.float32)
+    return mvm_accuracy(w, x, kind=kind, cfg=analog_cfg, mode=mode,
+                        arch=cfg.name, devices=devices)
+
+
+def accuracy_surface(
+    cfg: ArchConfig,
+    kind: str = "afmtj",
+    adc_bits: Sequence[int] = (4, 6, 8),
+    tmrs: Sequence[float] = (0.8, 5.0),
+    g_sigma: float = 0.0,
+    **kw,
+) -> Dict[Tuple[int, float], "AccuracyReport"]:
+    """Accuracy-vs-``adc_bits``-vs-TMR surface for one arch: the functional
+    companion of ``map_arch_decode``'s latency/energy point."""
+    from repro.imc.analog_pipeline import AnalogConfig
+
+    out = {}
+    for bits in adc_bits:
+        for tmr in tmrs:
+            acfg = AnalogConfig(adc_bits=bits, tmr=tmr, g_sigma=g_sigma)
+            out[(bits, tmr)] = decode_projection_accuracy(
+                cfg, kind=kind, analog_cfg=acfg, **kw)
     return out

@@ -69,6 +69,7 @@ def bitline_mac(v, g, adc_bits: int = 0, i_max: float = 1.0):
                               interpret=_default_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("binarize",))
-def xnor_gemm(a, w, binarize: bool = False):
-    return xnor_gemm_pallas(a, w, binarize, interpret=_default_interpret())
+@functools.partial(jax.jit, static_argnames=("binarize", "tie"))
+def xnor_gemm(a, w, binarize: bool = False, tie: int = 1):
+    return xnor_gemm_pallas(a, w, binarize, tie=tie,
+                            interpret=_default_interpret())

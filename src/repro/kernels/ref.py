@@ -61,18 +61,18 @@ def ref_llg_rk4(
 
 
 def ref_bitline_mac(v, g, adc_bits: int = 0, i_max: float = 1.0):
+    from repro.kernels.bitline_mac import adc_quantize
+
     i_bl = v.astype(jnp.float32) @ g.astype(jnp.float32)
-    if adc_bits > 0:
-        levels = float(2**adc_bits - 1)
-        x = jnp.clip(i_bl / i_max, 0.0, 1.0)
-        i_bl = jnp.round(x * levels) / levels * i_max
-    return i_bl
+    return adc_quantize(i_bl, adc_bits, i_max)
 
 
-def ref_xnor_gemm(a, w, binarize: bool = False):
+def ref_xnor_gemm(a, w, binarize: bool = False, tie: int = 1):
+    from repro.kernels.xnor_gemm import binarize_acc
+
     out = a.astype(jnp.float32) @ w.astype(jnp.float32)
     if binarize:
-        out = jnp.where(out >= 0.0, 1.0, -1.0)
+        out = binarize_acc(out, tie)
     return out
 
 

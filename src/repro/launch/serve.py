@@ -2,24 +2,36 @@
 
 ``python -m repro.launch.serve --arch qwen2-0.5b --requests 16``
 
-A minimal production-shaped server loop: a request queue feeds fixed-size
-decode batches; finished sequences (EOS or max-len) free their slot, and the
-next queued request is prefilled into it.  On this container it runs the
-reduced (smoke) configs; the same code path lowers at the production mesh in
-the dry-run (prefill_32k / decode_32k / long_500k cells).
+A minimal production-shaped server loop with true slot-freeing: a request
+queue feeds a fixed number of decode *slots*; a sequence finishes on EOS
+(``--eos-id``) or ``--max-new``, frees its slot, and the next queued request
+joins at the following step boundary.  Joins use prefill-on-join continuous
+batching: every slot's token history (right-aligned into a fixed
+``prompt_len + max_new`` window, so the prefill compiles once) is re-prefilled
+as one batch, then decoding resumes — the recompute-on-join variant of
+continuous batching, chosen because the decode cache keeps a single shared
+position scalar.  Decode tokens are counted only for live slots; finished
+sequences cost nothing.
+
+On this container it runs the reduced (smoke) configs; the same code path
+lowers at the production mesh in the dry-run (prefill_32k / decode_32k /
+long_500k cells).  ``main`` returns a stats dict (served counts, per-request
+completions, token totals) so the smoke test can pin the accounting.
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ShapeConfig
 from repro.configs.registry import smoke_config
 from repro.models import model as M
+
+PAD_ID = 0
 
 
 def main(argv=None):
@@ -29,48 +41,104 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="token id that finishes a sequence (-1: disabled)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch)
-    max_seq = args.prompt_len + cfg.frontend_positions + args.max_new
+    window = args.prompt_len + args.max_new          # fixed prefill width
+    max_seq = window + cfg.frontend_positions + args.max_new + 2
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
-    def make_batch(rng):
-        b = {"tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)}
-        if cfg.frontend_positions and not cfg.n_encoder_layers:
-            b["frontend_embeds"] = jnp.asarray(
-                rng.standard_normal(
-                    (args.batch, cfg.frontend_positions, cfg.d_model)),
-                jnp.float32)
-        if cfg.n_encoder_layers:
-            b["encoder_frames"] = jnp.asarray(
-                rng.standard_normal(
-                    (args.batch, cfg.frontend_positions, cfg.d_model)),
-                jnp.float32)
-        return b
+    rng = np.random.default_rng(0)
+    frontend_key = ("encoder_frames" if cfg.n_encoder_layers else
+                    "frontend_embeds" if cfg.frontend_positions else None)
+
+    def draw_frontend():
+        """One request's frontend conditioning — drawn once at admission and
+        kept for the request's whole lifetime (re-prefills must not change
+        the 'image' a sequence is conditioned on)."""
+        return rng.standard_normal(
+            (cfg.frontend_positions, cfg.d_model)).astype(np.float32)
 
     prefill = jax.jit(lambda p, b: M.serve_prefill(p, cfg, b, max_seq=max_seq))
     decode = jax.jit(lambda p, c, t: M.serve_step(p, cfg, c, t))
 
-    rng = np.random.default_rng(0)
+    # --- request queue + slot state ----------------------------------------
+    queue = collections.deque(
+        (rid, rng.integers(1, cfg.vocab, args.prompt_len).astype(np.int32))
+        for rid in range(args.requests))
+    slot_req = [None] * args.batch       # request id per slot (None = idle)
+    slot_hist = [np.zeros(0, np.int32)] * args.batch   # prompt + generated
+    slot_gen = [0] * args.batch          # generated-token count per slot
+    slot_front = [None] * args.batch     # per-request frontend conditioning
+    completions = {}                     # rid -> list of generated tokens
+
+    def admit_and_prefill():
+        """Fill idle slots from the queue and (re)prefill the whole batch."""
+        for s in range(args.batch):
+            if slot_req[s] is None and queue:
+                rid, prompt = queue.popleft()
+                slot_req[s], slot_hist[s], slot_gen[s] = rid, prompt, 0
+                if frontend_key:
+                    slot_front[s] = draw_frontend()
+        hist = np.full((args.batch, window), PAD_ID, np.int32)
+        for s in range(args.batch):
+            h = slot_hist[s][-window:]
+            if h.size:
+                hist[s, window - h.size:] = h     # right-aligned
+        batch = {"tokens": jnp.asarray(hist)}
+        if frontend_key:
+            batch[frontend_key] = jnp.asarray(np.stack([
+                f if f is not None else
+                np.zeros((cfg.frontend_positions, cfg.d_model), np.float32)
+                for f in slot_front]))
+        logits, cache = prefill(params, batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return cache, tok
+
     served = 0
     total_tokens = 0
+    prefills = 0
     t0 = time.time()
     while served < args.requests:
-        batch = make_batch(rng)
-        logits, cache = prefill(params, batch)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        for _ in range(args.max_new):
-            logits, cache = decode(params, cache, tok)
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            total_tokens += args.batch
-        served += args.batch
+        cache, tok = admit_and_prefill()
+        prefills += 1
+        # decode until a slot frees with work still queued (then re-join),
+        # or until every live slot finishes (drain)
+        while True:
+            freed = False
+            tok_np = np.asarray(tok)
+            for s in range(args.batch):
+                if slot_req[s] is None:
+                    continue                      # dead slot: not counted
+                t = int(tok_np[s])
+                slot_hist[s] = np.append(slot_hist[s], np.int32(t))
+                slot_gen[s] += 1
+                total_tokens += 1
+                done = (t == args.eos_id) or (slot_gen[s] >= args.max_new)
+                if done:
+                    completions[slot_req[s]] = (
+                        slot_hist[s][-slot_gen[s]:].tolist())
+                    slot_req[s] = None
+                    served += 1
+                    freed = True
+            if served >= args.requests or (freed and queue):
+                break
+            logits, cache = decode(params, cache, tok[:, None])
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         print(f"served {served}/{args.requests} requests "
-              f"({total_tokens} decode tokens)")
+              f"({total_tokens} decode tokens, {prefills} prefill waves)")
     dt = time.time() - t0
     print(f"throughput: {total_tokens/dt:.1f} decode tok/s "
           f"(smoke config on CPU; production numbers come from the dry-run)")
+    return {
+        "served": served,
+        "decode_tokens": total_tokens,
+        "prefills": prefills,
+        "completions": [completions[r] for r in sorted(completions)],
+        "elapsed_s": dt,
+    }
 
 
 if __name__ == "__main__":

@@ -1,0 +1,231 @@
+"""Functional analog read path: signed ADC, shape padding, tie conventions,
+differential programming exactness, nonideality ordering, and the BNN
+density accounting."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.imc.analog_pipeline import (AnalogConfig, analog_matmul,
+                                       binary_matmul, mvm_accuracy,
+                                       program_weights)
+from repro.kernels import ops, ref
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# --- satellite: signed ADC ---------------------------------------------------
+
+def test_adc_preserves_negative_currents():
+    """Regression for the clip(0,1) bug: signed bit-line currents must pass
+    the ADC with a non-zero negative contribution."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    v = jax.random.normal(k1, (16, 128))            # signed drives
+    g = jax.random.normal(k2, (128, 32)) * 1e-4     # signed differential G
+    ideal = np.asarray(v @ g)
+    out = np.asarray(ops.bitline_mac(v, g, adc_bits=6, i_max=2e-3))
+    assert (out < 0).any(), "ADC zeroed every negative current"
+    # negative entries must track the ideal sign, not be clipped to zero
+    neg = ideal < -1e-4
+    assert neg.any()
+    assert np.mean(np.sign(out[neg]) == -1) > 0.99
+    # and agree with the jnp oracle
+    np.testing.assert_allclose(out, np.asarray(
+        ref.ref_bitline_mac(v, g, adc_bits=6, i_max=2e-3)),
+        rtol=1e-5, atol=2e-3 / 31 * 1.001)
+
+
+def test_adc_symmetric_transfer():
+    """Quantizer is odd: q(-i) == -q(i) (symmetric full scale, no 0/1 bias)."""
+    from repro.kernels.bitline_mac import adc_quantize
+
+    i = jnp.linspace(0.0, 2.0, 201)
+    np.testing.assert_allclose(np.asarray(adc_quantize(-i, 5, 1.0)),
+                               -np.asarray(adc_quantize(i, 5, 1.0)), atol=0)
+    q = adc_quantize(jnp.asarray([-5.0, 5.0]), 5, 1.0)
+    assert float(q[0]) == -1.0 and float(q[1]) == 1.0
+
+
+# --- padding: non-128-multiple shapes ---------------------------------------
+
+@pytest.mark.parametrize("shape", [(3, 200, 77), (65, 130, 190), (1, 1, 1),
+                                   (129, 127, 128)])
+def test_bitline_mac_padded_parity(shape):
+    m, k, n = shape
+    v = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    g = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 3.4e-4
+    out_k = np.asarray(ops.bitline_mac(v, g))
+    out_r = np.asarray(ref.ref_bitline_mac(v, g))
+    assert out_k.shape == (m, n)
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-8)
+
+
+@pytest.mark.parametrize("shape", [(3, 200, 77), (130, 190, 65)])
+def test_xnor_gemm_padded_parity(shape):
+    m, k, n = shape
+    a = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), (m, k)))
+    w = jnp.sign(jax.random.normal(jax.random.PRNGKey(3), (k, n)))
+    out_k = np.asarray(ops.xnor_gemm(a, w, binarize=True))
+    out_r = np.asarray(ref.ref_xnor_gemm(a, w, binarize=True))
+    assert out_k.shape == (m, n)
+    np.testing.assert_allclose(out_k, out_r, atol=0)
+
+
+# --- satellite: XNOR tie convention -----------------------------------------
+
+@pytest.mark.parametrize("tie", [1, -1])
+def test_xnor_binarize_tie(tie):
+    """Even-K exact ties must land on the requested side, kernel == oracle."""
+    k = 128                                   # even: a @ w can be exactly 0
+    a = jnp.concatenate([jnp.ones((8, k // 2)), -jnp.ones((8, k // 2))], 1)
+    w = jnp.ones((k, 16))                     # every output is an exact tie
+    out_k = np.asarray(ops.xnor_gemm(a, w, binarize=True, tie=tie))
+    out_r = np.asarray(ref.ref_xnor_gemm(a, w, binarize=True, tie=tie))
+    assert (out_k == tie).all(), out_k
+    np.testing.assert_allclose(out_k, out_r, atol=0)
+
+
+def test_xnor_default_tie_matches_seed_convention():
+    """Default tie=+1 keeps the seed's ``acc >= 0 -> +1`` behavior."""
+    a = jnp.asarray([[1.0, -1.0]])
+    w = jnp.asarray([[1.0], [1.0]])
+    assert float(ops.xnor_gemm(a, w, binarize=True)[0, 0]) == 1.0
+
+
+# --- tentpole: differential programming + analog MVM -------------------------
+
+def _wx(k=200, n=150, m=7, seed=0):
+    kw, kx = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(kw, (k, n)) / k**0.5,
+            jax.random.normal(kx, (m, k)))
+
+
+def test_ideal_path_is_exact():
+    """No ADC, no IR drop, no variation: the differential encoding + decode
+    chain must reproduce x @ w to float tolerance (odd shapes included)."""
+    w, x = _wx()
+    arr = program_weights(w, "afmtj", AnalogConfig(adc_bits=0, ir_drop=False))
+    y = np.asarray(analog_matmul(arr, x))
+    y_ref = np.asarray(x @ w)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5,
+                               atol=2e-5 * np.abs(y_ref).max())
+
+
+def test_programming_is_differential_and_physical():
+    """Per-cell conductances stay within the device span; negative weights
+    live on the negative cell (g_diff < 0 there)."""
+    w, _ = _wx()
+    arr = program_weights(w, "afmtj", AnalogConfig(adc_bits=0, ir_drop=False))
+    sign_match = np.sign(np.asarray(arr.g_diff)) == np.sign(np.asarray(w))
+    assert sign_match.mean() > 0.999
+    assert np.abs(np.asarray(arr.g_diff)).max() <= arr.g_fs * (1 + 1e-6)
+
+
+def test_signed_activations_through_fixed_adc():
+    """Acceptance: signed activations pass the fixed ADC with a verified
+    non-zero negative-current contribution in the *quantized* output."""
+    w, x = _wx()
+    arr = program_weights(w, "afmtj", AnalogConfig(adc_bits=6, ir_drop=False))
+    y = np.asarray(analog_matmul(arr, x))
+    y_ref = np.asarray(x @ w)
+    assert (y < 0).sum() > 0.3 * y.size          # negatives survive the ADC
+    assert np.corrcoef(y.ravel(), y_ref.ravel())[0, 1] > 0.99
+
+
+def test_adc_bits_monotonic():
+    w, x = _wx()
+    nmse = {b: mvm_accuracy(w, x, cfg=AnalogConfig(adc_bits=b)).nmse
+            for b in (4, 6, 8)}
+    assert nmse[4] > nmse[6] > nmse[8], nmse
+
+
+def test_higher_tmr_tolerates_variation_better():
+    """At fixed D2D variation the wider conductance span (higher TMR) must
+    give a lower relative error — the paper's TMR-matters claim."""
+    w, x = _wx()
+    lo = mvm_accuracy(w, x, cfg=AnalogConfig(adc_bits=8, tmr=0.8, g_sigma=0.05))
+    hi = mvm_accuracy(w, x, cfg=AnalogConfig(adc_bits=8, tmr=5.0, g_sigma=0.05))
+    assert hi.nmse < lo.nmse / 2, (lo.nmse, hi.nmse)
+
+
+def test_ir_drop_is_column_gain_error():
+    """IR drop on its own (no ADC/variation) leaves a small per-column gain
+    spread after mean calibration — bounded, not catastrophic."""
+    w, x = _wx()
+    arr = program_weights(w, "afmtj", AnalogConfig(adc_bits=0, ir_drop=True))
+    assert arr.att_mean < 1.0
+    r = mvm_accuracy(w, x, cfg=AnalogConfig(adc_bits=0, ir_drop=True))
+    assert r.nmse < 0.05 and r.cosine > 0.97, (r.nmse, r.cosine)
+
+
+def test_bnn_mode_correlates():
+    w, x = _wx()
+    y = np.asarray(binary_matmul(x, w))
+    y_ref = np.asarray(x @ w)
+    assert np.corrcoef(y.ravel(), y_ref.ravel())[0, 1] > 0.5
+
+
+# --- mapping wiring ----------------------------------------------------------
+
+def test_accuracy_surface_shape():
+    from repro.imc.mapping import accuracy_surface
+
+    surf = accuracy_surface(ARCHS["qwen2-0.5b"], adc_bits=(4, 8), tmrs=(0.8,),
+                            cap_k=128, cap_n=64, batch=4)
+    assert set(surf) == {(4, 0.8), (8, 0.8)}
+    for r in surf.values():
+        assert r.arch == "qwen2-0.5b" and 0.0 < r.cosine <= 1.0
+
+
+def test_bnn_tiles_8x_fewer():
+    """Satellite: 8-bit weights occupy 8 cells, binarized 1 — the BNN map
+    must use exactly 8x fewer crossbar tiles."""
+    from repro.imc.hierarchy import build_hierarchy
+    from repro.imc.mapping import map_arch_decode
+
+    hier = build_hierarchy("afmtj")
+    for name in ("qwen2-0.5b", "gemma2-2b"):
+        r = map_arch_decode(ARCHS[name], hier)
+        assert r.tiles == pytest.approx(8.0 * r.tiles_bnn)
+        assert r.t_imc_bnn < r.t_imc        # denser + ADC-free => faster
+
+
+# --- sharded batch axis ------------------------------------------------------
+
+def test_sharded_mvm_matches_single_device():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from repro.imc.analog_pipeline import AnalogConfig, program_weights, analog_matmul
+kw, kx = jax.random.split(jax.random.PRNGKey(0))
+w = jax.random.normal(kw, (200, 150)) / 200**0.5
+x = jax.random.normal(kx, (7, 200))          # odd batch: pad + shard
+arr = program_weights(w, "afmtj", AnalogConfig(adc_bits=6))
+y4 = np.asarray(analog_matmul(arr, x, devices=4))
+y1 = np.asarray(analog_matmul(arr, x, devices=1))
+print("SHARDED_OK", np.allclose(y4, y1, rtol=1e-5, atol=1e-7))
+"""
+    r = subprocess.run([sys.executable, "-c", code],
+                       env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+                       capture_output=True, text=True, timeout=300)
+    assert "SHARDED_OK True" in r.stdout, r.stderr[-2000:]
+
+
+# --- satellite: 3-row logic energy -------------------------------------------
+
+def test_logic3_energy_exceeds_logic2():
+    """3-row majority conducts through three cells: its per-bit energy must
+    exceed the 2-row ops', and by less than the naive 2x."""
+    from repro.circuit.subarray import make_subarray
+
+    for kind in ("afmtj", "mtj"):
+        tm = make_subarray(kind, rows=8, cols=4).timings
+        assert tm.e_logic3_bit > tm.e_logic_bit, kind
+        assert tm.e_logic3_bit < 2.0 * tm.e_logic_bit, kind

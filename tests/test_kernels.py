@@ -66,8 +66,16 @@ def test_bitline_mac_matches_ref(shape, adc_bits):
     g = jax.random.uniform(jax.random.PRNGKey(1), (k, n)) * 3.4e-4
     out_k = ops.bitline_mac(v, g, adc_bits, i_max=0.05)
     out_r = ref.ref_bitline_mac(v, g, adc_bits, i_max=0.05)
-    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
-                               rtol=1e-5, atol=1e-8)
+    if adc_bits == 0:
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-5, atol=1e-8)
+    else:
+        # tiled-K accumulation can land a float-ulp away from the oracle at a
+        # quantizer bin edge: allow <=1 LSB there, on <1% of elements
+        lsb = 0.05 / (2 ** (adc_bits - 1) - 1)
+        diff = np.abs(np.asarray(out_k) - np.asarray(out_r))
+        assert diff.max() <= lsb * 1.001, diff.max()
+        assert (diff > lsb * 1e-3).mean() < 0.01
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -53,10 +53,29 @@ def test_train_microbatched_matches_shape(tmp_path):
 
 
 def test_serve_driver():
+    """Continuous batching: 5 requests through 2 slots needs slot-freeing;
+    accounting must be per-request (exactly 5 served, no dead-slot tokens)."""
     from repro.launch.serve import main
 
-    main(["--arch", "qwen2-0.5b", "--requests", "4", "--batch", "2",
-          "--prompt-len", "16", "--max-new", "4"])
+    stats = main(["--arch", "qwen2-0.5b", "--requests", "5", "--batch", "2",
+                  "--prompt-len", "16", "--max-new", "4"])
+    assert stats["served"] == 5
+    assert stats["decode_tokens"] == 5 * 4       # not rounded up to batches
+    assert stats["prefills"] >= 3                # joins actually happened
+    assert [len(c) for c in stats["completions"]] == [4] * 5
+
+
+def test_serve_honors_eos():
+    """A sequence emitting --eos-id frees its slot early and stops counting."""
+    from repro.launch.serve import main
+
+    probe = main(["--arch", "qwen2-0.5b", "--requests", "2", "--batch", "2",
+                  "--prompt-len", "16", "--max-new", "4"])
+    eos = probe["completions"][0][0]             # deterministic first token
+    stats = main(["--arch", "qwen2-0.5b", "--requests", "2", "--batch", "2",
+                  "--prompt-len", "16", "--max-new", "4", "--eos-id", str(eos)])
+    assert stats["completions"][0] == [eos]      # finished at the EOS token
+    assert stats["decode_tokens"] < probe["decode_tokens"]
 
 
 @pytest.mark.slow
