@@ -17,4 +17,4 @@ from repro.campaign.engine import (  # noqa: F401
     run_campaign,
     run_ensemble,
 )
-from repro.campaign.grid import CampaignGrid, pack_plane  # noqa: F401
+from repro.campaign.grid import CampaignGrid, pack_plane, pack_soa  # noqa: F401

@@ -28,12 +28,12 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.campaign import cache as _cache
-from repro.campaign.grid import CampaignGrid, pack_plane
+from repro.campaign.grid import CampaignGrid, pack_plane, pack_soa
 from repro.core.montecarlo import thermal_sigma
 from repro.core.params import DeviceParams
 from repro.kernels import noise, ref
 from repro.kernels.llg_rk4 import CELL_TILE, llg_rk4_pallas
-from repro.kernels.ops import _default_interpret, pack_states
+from repro.kernels.ops import _default_interpret
 
 
 def brown_sigma(p: DeviceParams, dt: float, temperature: Optional[float] = None
@@ -53,7 +53,11 @@ def _integrate_sharded(state, seeds, *, p: DeviceParams, dt: float,
     """Advance a (8, cells) block on ``n_dev`` devices (cells sharded)."""
 
     def tile_fn(st, sd):
-        if backend == "ref":
+        # the SoA Pallas kernel is dual-sublattice by construction
+        # (staggered Neel STT); single-sublattice FM/MTJ devices integrate
+        # the same production physics through the oracle's lane-vectorized
+        # scan — same grids, padding, RNG streams, first-crossing row 7
+        if p.n_sublattices == 1 or backend == "ref":
             return ref.ref_llg_rk4(st, p, dt, n_steps, switch_threshold,
                                    thermal_sigma=sigma, seeds=sd)
         return llg_rk4_pallas(st, p, dt, n_steps, switch_threshold,
@@ -115,10 +119,14 @@ def run_ensemble(
     """Integrate an arbitrary thermal ensemble through the kernel path.
 
     The general entry point (used by ``examples/array_mc_sim.py`` for
-    per-cell IR-drop voltage maps); ``run_campaign`` packs structured
-    (V x S) grids on top of it.  ``temperature=None`` uses ``p.temperature``;
-    ``temperature=0`` (or alpha/volume making sigma 0) falls back to the
-    deterministic kernel.
+    per-cell IR-drop voltage maps and by ``imc.write_path`` for write-verify
+    rounds); ``run_campaign`` packs structured (V x S) grids on top of it.
+    ``temperature=None`` uses ``p.temperature``; ``temperature=0`` (or
+    alpha/volume making sigma 0) falls back to the deterministic kernel.
+    Single-sublattice devices (``p.n_sublattices == 1``, the MTJ baseline)
+    integrate through the ``kernels.ref.ref_llg_rk4`` scan — same API,
+    grids and reductions, no Pallas kernel (the SoA kernel is
+    dual-sublattice only).
 
     Never-switched lanes report ``crossing_steps == n_steps`` (so
     ``crossing_time == n_steps*dt``); when thresholding crossings against a
@@ -126,7 +134,7 @@ def run_ensemble(
     longest pulse (``CampaignGrid`` does this automatically).
     """
     cells = m0.shape[0]
-    state = pack_states(m0, jnp.asarray(voltages, jnp.float32))
+    state = pack_soa(m0, jnp.asarray(voltages, jnp.float32))
     padded = state.shape[1]
     sigma = brown_sigma(p, dt, temperature)
     seeds = noise.cell_seeds(seed, padded)

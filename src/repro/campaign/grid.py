@@ -26,6 +26,7 @@ from repro.core import llg
 from repro.core.device import thermal_theta0
 from repro.core.params import DeviceParams
 from repro.kernels import noise
+from repro.kernels.llg_rk4 import CELL_TILE
 from repro.kernels.ops import pack_states
 
 
@@ -75,6 +76,28 @@ class CampaignGrid:
                 len(self.pulse_widths), self.n_samples)
 
 
+def pack_soa(m0: jnp.ndarray, voltages: jnp.ndarray) -> jnp.ndarray:
+    """(cells, n_sub, 3) states + (cells,) drives -> padded ``(8, cells)`` SoA.
+
+    Dual-sublattice states go through ``kernels.ops.pack_states`` (the Pallas
+    kernel's layout contract).  Single-sublattice (FM/MTJ) states keep rows
+    0-2 for m and zero rows 3-5 — the engine routes those tiles through the
+    ``kernels.ref.ref_llg_rk4`` scan path, never the Pallas kernel, but the
+    campaign semantics (padding, seeds, first-crossing row 7) are
+    identical.
+    """
+    if m0.shape[1] == 2:
+        return pack_states(m0, jnp.asarray(voltages, jnp.float32))
+    assert m0.shape[1] == 1, m0.shape
+    cells = m0.shape[0]
+    pad = (-cells) % CELL_TILE
+    m0 = jnp.pad(m0, ((0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(jnp.asarray(voltages, jnp.float32), (0, pad))
+    z = jnp.zeros_like(v)
+    rows = [m0[:, 0, 0], m0[:, 0, 1], m0[:, 0, 2], z, z, z, v, z]
+    return jnp.stack(rows).astype(jnp.float32)
+
+
 def pack_plane(grid: CampaignGrid, p: DeviceParams, t_index: int):
     """Pack the (voltage x sample) plane for one temperature slice.
 
@@ -98,7 +121,7 @@ def pack_plane(grid: CampaignGrid, p: DeviceParams, t_index: int):
     m0 = jax.vmap(lambda t, f: llg.initial_state(p, t, f))(th, ph)
     v = jnp.repeat(jnp.asarray(grid.voltages, jnp.float32), n_s)
 
-    state = pack_states(m0, v)                      # pads to CELL_TILE
+    state = pack_soa(m0, v)                         # pads to CELL_TILE
     padded = state.shape[1]
     # distinct stream block per temperature slice: offset the base seed so
     # T=0 and T=1 lanes never share counters

@@ -9,7 +9,10 @@ lives in a plain jnp array so whole-array logic ops are vectorized.
 Latency model per op (row-granular, all columns in parallel):
   read   : t_bl_settle + t_sa
   logic  : t_bl_settle + t_sa(multi-row differential)  [2-3 activated rows]
-  write  : t_write(V) from the LLG device model (incl. bit-line RC)
+  write  : t_write(V) from the LLG device model (incl. bit-line RC); with
+           ``write_percentile`` set, the *measured* row write time at that
+           percentile of the write-verify retry distribution
+           (``imc.write_path``, DESIGN.md §7)
 Energy per op = per-column device/SA energy * active columns + driver overhead.
 """
 from __future__ import annotations
@@ -29,7 +32,14 @@ from repro.core.params import AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams
 
 @dataclasses.dataclass(frozen=True)
 class SubarrayTimings:
-    """Per-operation latency [s] / energy-per-bit [J] for one subarray."""
+    """Per-operation latency [s] / energy-per-bit [J] for one subarray.
+
+    ``t_write``/``e_write_bit`` come from the closed-form single-pulse model
+    by default; with ``make_subarray(..., write_percentile=...)`` they are
+    *measured* from the write-verify retry distribution (DESIGN.md §7) and
+    the ``write_*`` fields carry the retry statistics (1.0 / 0.0 in the
+    closed-form case — one pulse, no residual errors by assumption).
+    """
 
     t_read: float
     t_write: float
@@ -41,6 +51,9 @@ class SubarrayTimings:
     e_logic3_bit: float      # 3-row logic: three cells conduct per column
     rows: int
     cols: int
+    write_attempts: float = 1.0        # mean pulses per cell write
+    write_residual_ber: float = 0.0    # bit-error rate left after retries
+    write_percentile: float | None = None  # None = closed-form single pulse
 
     @property
     def row_bits(self) -> int:
@@ -104,6 +117,7 @@ def make_subarray(
     bl: BitlineParams | None = None,
     sa: SenseAmpParams | None = None,
     wer_target: float | None = None,
+    write_percentile: float | None = None,
 ) -> Subarray:
     dev = AFMTJ_PARAMS if kind == "afmtj" else MTJ_PARAMS
     bl = bl or BitlineParams(rows=rows)
@@ -111,22 +125,43 @@ def make_subarray(
 
     # --- device-level write characterization (the LLG solve, cached) -------
     t_rc = write_path_rc(bl)
-    t_sw, e_sw = _characterize_write(kind, v_write)
-    if wer_target is not None:
-        # thermal-tail margin: size the pulse so WER <= target via the
-        # Monte-Carlo campaign engine instead of the mean switching time
-        from repro.imc.write_margin import wer_margined_pulse
+    w_attempts, w_ber = 1.0, 0.0
+    if write_percentile is not None:
+        # measured stochastic write path (DESIGN.md §7): row write time at
+        # the controller percentile of the write-verify retry distribution,
+        # mean per-bit energy over issued pulses.  Per-attempt pulse: the
+        # WER-ladder pulse when wer_target is also given, device-nominal x
+        # thermal margin otherwise.  t_rc rides inside every attempt cycle,
+        # so nothing is added on top here.
+        from repro.imc.write_path import measured_write_timings
 
-        t_pulse = wer_margined_pulse(kind, v_write, wer_target)
-        t_pulse = max(t_pulse, t_sw)
-        # the post-switch tail of the pulse burns energy at the written
-        # (antiparallel) state's conductance
-        e_sw = e_sw + v_write**2 / dev.r_antiparallel * (t_pulse - t_sw)
-        t_sw = t_pulse
-    # t_rc enters additively (driver charges the line, then the pulse runs);
-    # overhead energy at the parallel-state conductance.
-    t_write = t_sw + t_rc
-    e_write = e_sw + v_write**2 / dev.r_parallel * t_rc
+        pulse = None
+        if wer_target is not None:
+            from repro.imc.write_margin import wer_margined_pulse
+
+            pulse = wer_margined_pulse(kind, v_write, wer_target)
+        mw = measured_write_timings(kind, v_write=v_write, cols=cols,
+                                    percentile=write_percentile, t_rc=t_rc,
+                                    pulse=pulse)
+        t_write, e_write = mw.t_write, mw.e_write_bit
+        w_attempts, w_ber = mw.attempts_mean, mw.residual_ber
+    else:
+        t_sw, e_sw = _characterize_write(kind, v_write)
+        if wer_target is not None:
+            # thermal-tail margin: size the pulse so WER <= target via the
+            # Monte-Carlo campaign engine instead of the mean switching time
+            from repro.imc.write_margin import wer_margined_pulse
+
+            t_pulse = wer_margined_pulse(kind, v_write, wer_target)
+            t_pulse = max(t_pulse, t_sw)
+            # the post-switch tail of the pulse burns energy at the written
+            # (antiparallel) state's conductance
+            e_sw = e_sw + v_write**2 / dev.r_antiparallel * (t_pulse - t_sw)
+            t_sw = t_pulse
+        # t_rc enters additively (driver charges the line, then the pulse
+        # runs); overhead energy at the parallel-state conductance.
+        t_write = t_sw + t_rc
+        e_write = e_sw + v_write**2 / dev.r_parallel * t_rc
 
     # --- circuit-level read/logic characterization --------------------------
     g_worst = jnp.asarray(1.0 / dev.r_antiparallel)
@@ -155,6 +190,9 @@ def make_subarray(
         e_logic3_bit=e_logic3,
         rows=rows,
         cols=cols,
+        write_attempts=w_attempts,
+        write_residual_ber=w_ber,
+        write_percentile=write_percentile,
     )
     state = jnp.zeros((rows, cols), dtype=jnp.uint8)
     return Subarray(dev=dev, bl=bl, sa=sa, timings=timings, state=state)

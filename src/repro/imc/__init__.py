@@ -7,6 +7,9 @@
   evaluate  — system-level latency/energy vs the CPU baseline (Fig. 4)
   mapping   — beyond-paper: mapping LM-architecture inference onto the IMC
   write_margin — WER-targeted write-pulse sizing via the campaign engine
+  write_path — stochastic write path: write-verify retry scheduler over
+              thermal LLG transients, measured latency/energy/retry
+              distributions and residual bit-error rates (DESIGN.md §7)
   analog_pipeline — functional analog MVM through the Pallas bitline/XNOR
               kernels: conductance programming, IR drop, signed ADC
               (DESIGN.md §6)
@@ -17,12 +20,16 @@ from repro.imc.workloads import WORKLOADS, Workload  # noqa: F401
 from repro.imc.evaluate import evaluate_system, SystemResult  # noqa: F401
 from repro.imc.write_margin import wer_margined_pulse  # noqa: F401
 
-# analog_pipeline re-exports are lazy (PEP 562): it pulls shard_map + Pallas,
-# which closed-form consumers (evaluate/mapping/fig4) must not pay for at
-# package-import time.
+# analog_pipeline / write_path re-exports are lazy (PEP 562): they pull the
+# campaign engine, shard_map + Pallas, which closed-form consumers
+# (evaluate/mapping/fig4) must not pay for at package-import time.
 _ANALOG_EXPORTS = ("AnalogConfig", "AccuracyReport", "ProgrammedArray",
                    "analog_matmul", "binary_matmul", "mvm_accuracy",
                    "program_weights", "kernel_operands")
+_WRITE_PATH_EXPORTS = ("WritePolicy", "ArrayWriteResult", "MeasuredWrite",
+                       "WriteSurface", "write_verify", "program_bits",
+                       "measured_write_timings", "write_surface",
+                       "nominal_pulse")
 
 
 def __getattr__(name):
@@ -30,4 +37,8 @@ def __getattr__(name):
         from repro.imc import analog_pipeline
 
         return getattr(analog_pipeline, name)
+    if name in _WRITE_PATH_EXPORTS:
+        from repro.imc import write_path
+
+        return getattr(write_path, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

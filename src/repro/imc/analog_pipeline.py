@@ -19,7 +19,9 @@ Signal chain (DESIGN.md §6):
      cell max(-w, 0), both riding on the G_AP floor.  Programming is
      write-verify pre-compensated (the linear map targets effective
      conductance), so device-to-device variation (``g_sigma``, lognormal on
-     the junction) is the residual programming error.
+     the junction) is the residual programming error; cells whose
+     write-verify attempt budget ran out (``write_ber``, measured by
+     ``imc.write_path`` — DESIGN.md §7) stay at the erased G_AP floor.
   2. **IR drop** — each differential line attenuates by its own column
      factor (heavier-loaded columns sag more).  The *mean* factor is a
      one-point gain calibration (divided out at decode); the per-column and
@@ -61,7 +63,7 @@ from repro.kernels.xnor_gemm import xnor_gemm_pallas
 
 @dataclasses.dataclass(frozen=True)
 class AnalogConfig:
-    """Read-path non-ideality knobs (the accuracy surface axes)."""
+    """Read/write-path non-ideality knobs (the accuracy surface axes)."""
 
     adc_bits: int = 6              # 0 = ideal ADC (no quantization)
     tmr: Optional[float] = None    # device TMR override (None = device default)
@@ -70,6 +72,10 @@ class AnalogConfig:
     ir_drop: bool = True           # per-column bit-line IR attenuation
     full_scale_sigmas: float = 4.0 # ADC full scale in column-current sigmas
     seed: int = 0                  # programming-variation draw
+    write_ber: float = 0.0         # residual write-error rate: probability a
+                                   # cell's write-verify budget ran out and it
+                                   # still sits at the erased G_AP floor
+                                   # (measured by ``imc.write_path``)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +140,18 @@ def program_weights(
         g_pos, g_neg = perturb(tgt_pos, k1), perturb(tgt_neg, k2)
     else:
         g_pos, g_neg = tgt_pos, tgt_neg
+
+    if cfg.write_ber > 0.0:
+        # residual write errors (imc.write_path, DESIGN.md §7): a cell whose
+        # write-verify attempt budget ran out never left the erased state,
+        # so it reads back at the G_AP floor instead of its target.  The
+        # fold_in constant keeps the g_sigma draw stream unchanged.
+        kber = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), 0x5EB)
+        kb1, kb2 = jax.random.split(kber)
+        fail_pos = jax.random.bernoulli(kb1, cfg.write_ber, tgt_pos.shape)
+        fail_neg = jax.random.bernoulli(kb2, cfg.write_ber, tgt_neg.shape)
+        g_pos = jnp.where(fail_pos, g_ap_eff, g_pos)
+        g_neg = jnp.where(fail_neg, g_ap_eff, g_neg)
 
     att_mean = 1.0
     if cfg.ir_drop:
@@ -266,6 +284,7 @@ class AccuracyReport:
     nmse: float                    # mse / mean(y_ref^2)
     cosine: float
     max_abs_err: float
+    write_ber: float = 0.0         # injected residual write-error rate
 
 
 def _report(y, y_ref, *, arch, kind, mode, cfg: AnalogConfig, tmr: float
@@ -281,7 +300,7 @@ def _report(y, y_ref, *, arch, kind, mode, cfg: AnalogConfig, tmr: float
         arch=arch, kind=kind, mode=mode, adc_bits=cfg.adc_bits, tmr=tmr,
         g_sigma=cfg.g_sigma, m=y.shape[0], k=0, n=y.shape[1], mse=mse,
         nmse=mse / max(ref_pw, 1e-30), cosine=cos,
-        max_abs_err=float(np.max(np.abs(err))))
+        max_abs_err=float(np.max(np.abs(err))), write_ber=cfg.write_ber)
 
 
 def mvm_accuracy(

@@ -27,6 +27,14 @@ class SystemResult:
     e_cpu: float
     t_imc: float
     e_imc: float
+    # write-stage provenance: the per-row-op write time the pipelined stage
+    # model actually used, and the retry statistics behind it (1.0 mean
+    # attempts when the closed-form single-pulse timing was in effect).
+    # Threading these through is what lets the Fig. 4 comparison show MTJ
+    # retry inflation instead of silently assuming one pulse per write.
+    t_write_op: float = 0.0
+    write_attempts: float = 1.0
+    write_residual_ber: float = 0.0
 
     @property
     def speedup(self) -> float:
@@ -72,14 +80,24 @@ def evaluate_workload(
     e_periph = n_row_ops * level.spec.e_periph_row_op
     e_imc = e_cells + e_periph
 
-    return SystemResult(w.name, t_cpu, e_cpu, t_imc, e_imc)
+    return SystemResult(w.name, t_cpu, e_cpu, t_imc, e_imc,
+                        t_write_op=tm.t_write,
+                        write_attempts=tm.write_attempts,
+                        write_residual_ber=tm.write_residual_ber)
 
 
 def evaluate_system(kind: str = "afmtj", v_write: float = 1.0,
-                    wer_target: float | None = None) -> Dict[str, SystemResult]:
+                    wer_target: float | None = None,
+                    write_percentile: float | None = None,
+                    ) -> Dict[str, SystemResult]:
     """``wer_target`` (e.g. 1e-2) sizes write pulses from the thermal-tail
-    Monte-Carlo campaign instead of the mean switching time."""
-    hier = build_hierarchy(kind, v_write=v_write, wer_target=wer_target)
+    Monte-Carlo campaign instead of the mean switching time;
+    ``write_percentile`` (e.g. 99.0) replaces the single-pulse write stage
+    time with the measured write-verify retry distribution's row time at
+    that percentile (``imc.write_path``) — with MTJs the retry-inflated
+    write stage dominates the pipe even harder than the nominal pulse."""
+    hier = build_hierarchy(kind, v_write=v_write, wer_target=wer_target,
+                           write_percentile=write_percentile)
     return {name: evaluate_workload(w, hier) for name, w in WORKLOADS.items()}
 
 

@@ -67,10 +67,14 @@ def build_hierarchy(
     kind: Literal["afmtj", "mtj"],
     v_write: float = 1.0,
     wer_target: float | None = None,
+    write_percentile: float | None = None,
 ) -> IMCHierarchy:
     """``wer_target`` switches write-pulse sizing from the mean switching
     time to a thermal-tail (Monte-Carlo campaign) margin — see
-    ``imc.write_margin``.  None keeps the seed deterministic timing."""
+    ``imc.write_margin``.  ``write_percentile`` (e.g. 99.0) goes further:
+    per-level write timings are *measured* from the write-verify retry
+    scheduler (``imc.write_path``, DESIGN.md §7) at that row-time
+    percentile.  None/None keeps the seed deterministic timing."""
     levels = {}
     for spec in LEVELS:
         bl = BitlineParams(
@@ -78,6 +82,7 @@ def build_hierarchy(
             rows=spec.rows,
         )
         sub = make_subarray(kind, rows=spec.rows, cols=spec.cols,
-                            v_write=v_write, bl=bl, wer_target=wer_target)
+                            v_write=v_write, bl=bl, wer_target=wer_target,
+                            write_percentile=write_percentile)
         levels[spec.name] = IMCLevel(spec=spec, timings=sub.timings)
     return IMCHierarchy(kind=kind, levels=levels)

@@ -24,6 +24,7 @@ energy + per-row ADC/peripheral + activation writes.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig
@@ -172,4 +173,84 @@ def accuracy_surface(
             acfg = AnalogConfig(adc_bits=bits, tmr=tmr, g_sigma=g_sigma)
             out[(bits, tmr)] = decode_projection_accuracy(
                 cfg, kind=kind, analog_cfg=acfg, **kw)
+    return out
+
+
+# --- functional write path: accuracy vs the measured cost of writing -------
+#
+# The read surface above varies read-side non-idealities at perfect weights;
+# the write surface varies how much latency/energy the write-verify
+# scheduler (``imc.write_path``, DESIGN.md §7) is allowed to spend and
+# injects the *resulting* residual bit-error rate into the programming step
+# — accuracy-vs-(WER target, write energy), the co-design trade the
+# companion write-driver work (PAPERS.md, arXiv 2602.11614) optimizes.
+
+@dataclasses.dataclass(frozen=True)
+class WriteAccuracyPoint:
+    """One (WER target) operating point of the write/accuracy trade."""
+
+    wer_target: float
+    attempts_budget: int       # verify retries allotted to reach the target
+    write_ber: float           # residual BER injected into programming
+    e_write_bit: float         # measured mean write energy per cell [J]
+    t_write_mean: float        # measured mean per-cell write latency [s]
+    attempts_mean: float       # measured mean pulses per cell
+    report: "AccuracyReport"   # decode-projection accuracy at that BER
+
+
+def write_energy_accuracy_surface(
+    cfg: ArchConfig,
+    kind: str = "afmtj",
+    wer_targets: Sequence[float] = (3e-1, 1e-1, 1e-2, 1e-4),
+    v_write: float = 1.0,
+    policy: Optional["WritePolicy"] = None,
+    n_cells: int = 512,
+    analog_cfg: Optional["AnalogConfig"] = None,
+    max_attempt_budget: int = 64,
+    **kw,
+) -> Dict[float, WriteAccuracyPoint]:
+    """Accuracy-vs-write-energy surface for one arch.
+
+    For each residual-WER target: size the verify attempt budget from the
+    measured single-pulse WER (attempts are geometric — DESIGN.md §7), run
+    the write-verify scheduler under that budget to *measure* energy,
+    latency and the residual bit-error rate, then push the residual errors
+    through the analog read path (``AnalogConfig.write_ber``) and score the
+    arch's decode projection.  Tighter WER targets buy accuracy with write
+    energy; loose targets leave stuck-at-floor cells the MVM has to eat.
+    ``policy`` defaults to the device-nominal pulse x margin — pass a
+    shorter pulse (e.g. ``pulse_margin < 1``) to widen the visible trade.
+    ``max_attempt_budget`` bounds the sized budget: at operating points
+    where the pulse essentially never switches (``wer1`` near 1) the
+    geometric sizing would otherwise schedule thousands of sequential
+    rounds — the point lands at the ceiling's residual BER instead.
+    """
+    from repro.imc.analog_pipeline import AnalogConfig
+    from repro.imc.write_path import WritePolicy, write_verify
+
+    pol = policy or WritePolicy(v_write=v_write)
+    probe = write_verify(kind, n_cells, dataclasses.replace(pol,
+                                                            max_attempts=1))
+    wer1 = probe.single_pulse_wer
+    out = {}
+    for target in wer_targets:
+        if 0.0 < wer1 < 1.0:
+            k = max(1, math.ceil(math.log(target) / math.log(wer1)))
+            k = min(k, int(max_attempt_budget))
+        else:
+            k = 1 if wer1 == 0.0 else int(max_attempt_budget)
+        r = write_verify(kind, n_cells,
+                         dataclasses.replace(pol, max_attempts=k))
+        # finite-sample floor: when every sampled cell verified, fall back
+        # to the geometric estimate of the residual
+        ber = r.residual_ber if r.residual_ber > 0.0 else float(wer1 ** k)
+        acfg = dataclasses.replace(analog_cfg or AnalogConfig(),
+                                   write_ber=float(ber))
+        rep = decode_projection_accuracy(cfg, kind=kind, analog_cfg=acfg,
+                                         **kw)
+        out[float(target)] = WriteAccuracyPoint(
+            wer_target=float(target), attempts_budget=k,
+            write_ber=float(ber), e_write_bit=r.energy_mean(),
+            t_write_mean=float(r.latency.mean()),
+            attempts_mean=r.attempts_mean, report=rep)
     return out

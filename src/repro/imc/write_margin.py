@@ -26,7 +26,9 @@ _LADDERS = {
     "afmtj": tuple(x * 1e-12 for x in (120, 160, 200, 250, 300, 400, 600)),
     "mtj": tuple(x * 1e-12 for x in (800, 1200, 1600, 2200, 3000, 4500, 6000)),
 }
-_DT = {"afmtj": 0.1e-12, "mtj": 0.2e-12}
+# Per-device campaign time steps (MTJ reversal is ~10x slower, so a coarser
+# step keeps its much longer integration horizons tractable).
+DEVICE_DT = {"afmtj": 0.1e-12, "mtj": 0.2e-12}
 
 
 def _params_for(kind: str) -> DeviceParams:
@@ -45,36 +47,26 @@ def wer_margined_pulse(
 ) -> float:
     """Smallest ladder pulse [s] with WER <= ``wer_target`` at ``v_write``.
 
-    AFMTJ: one campaign covers the whole ladder (the pulse axis is free —
-    see ``campaign.grid``).  MTJ: the campaign kernel is dual-sublattice
-    only, so the single-FM device walks the ladder through the
-    ``write_error_rate_scan`` path instead — correct physics, but one
-    integration per rung (minutes cold; in-process lru-cached).  Resolution
-    of the WER estimate is 1/n_samples either way, so ask for more samples
+    One campaign covers the whole ladder for either device kind: the pulse
+    axis is first-crossing post-processing (``campaign.grid``), so the
+    engine integrates once to the longest rung.  The MTJ baseline rides the
+    engine's single-sublattice scan tile (``kernels.ref.ref_llg_rk4``) — same
+    grids, caching and reductions, no per-rung re-integration (the old
+    ``write_error_rate_scan`` ladder walk paid one integration per rung).
+    Resolution of the WER estimate is 1/n_samples, so ask for more samples
     when targeting rates below ~1e-2.  Raises ValueError when no ladder
     rung meets the target.
     """
-    p = _params_for(kind)
-    pulses = ladder or _LADDERS[kind]
-
-    if p.n_sublattices != 2:
-        from repro.core.montecarlo import write_error_rate_scan
-
-        for pulse in sorted(pulses):
-            w = float(write_error_rate_scan(p, float(v_write), float(pulse),
-                                            n_samples=n_samples, dt=_DT[kind],
-                                            seed=seed))
-            if w <= wer_target:
-                return float(pulse)
-        raise ValueError(
-            f"no {kind} ladder pulse meets WER<={wer_target:g} at "
-            f"{v_write} V; widen the ladder or raise the voltage")
-
+    # lazy: keep `import repro.imc` free of the campaign/kernels stack
+    # (closed-form consumers never pay for Pallas at package-import time)
     from repro.campaign.engine import run_campaign
     from repro.campaign.grid import CampaignGrid
 
+    p = _params_for(kind)
+    pulses = ladder or _LADDERS[kind]
+
     grid = CampaignGrid(voltages=(float(v_write),), pulse_widths=pulses,
                         temperatures=(p.temperature,), n_samples=n_samples,
-                        dt=_DT[kind], seed=seed)
+                        dt=DEVICE_DT[kind], seed=seed)
     res = run_campaign(p, grid, use_cache=use_cache)
     return res.pulse_for_wer(wer_target, t_index=0, v_index=0)

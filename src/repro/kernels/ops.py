@@ -46,7 +46,8 @@ def pack_states(m0: jnp.ndarray, voltages: jnp.ndarray) -> jnp.ndarray:
     """(cells, 2, 3) initial states + (cells,) drives -> (8, cells) SoA."""
     assert m0.ndim == 3 and m0.shape[1] == 2, (
         f"SoA layout is dual-sublattice (AFMTJ) only, got {m0.shape}; "
-        "single-sublattice MTJ states must use the repro.core scan paths")
+        "single-sublattice (FM/MTJ) states pack via repro.campaign.grid."
+        "pack_soa and ride the engine's scan tile instead of this kernel")
     cells = m0.shape[0]
     pad = (-cells) % CELL_TILE
     m0 = jnp.pad(m0, ((0, pad), (0, 0), (0, 0)))

@@ -24,10 +24,19 @@ def ref_llg_rk4(
     thermal_sigma: float = 0.0,
     seeds: jnp.ndarray | None = None,   # (cells,) uint32 per-lane streams
 ) -> jnp.ndarray:
+    """Both device families: ``p.n_sublattices`` picks dual-sublattice
+    (AFMTJ — the Pallas kernel's allclose target) or single-sublattice
+    (FM/MTJ — the campaign engine's production tile; rows 3:6 stay zero
+    and only the first thermal triple of each per-lane counter is drawn,
+    so padded lanes and RNG streams behave identically across kinds)."""
     cells = state.shape[1]
-    m = jnp.stack(
-        [state[0:3].T, state[3:6].T], axis=1
-    )                              # (cells, 2, 3)
+    n_sub = p.n_sublattices
+    if n_sub == 1:
+        m = state[0:3].T[:, None, :]               # (cells, 1, 3)
+    else:
+        m = jnp.stack(
+            [state[0:3].T, state[3:6].T], axis=1
+        )                          # (cells, 2, 3)
     v = state[6]
     if thermal_sigma > 0.0:
         assert seeds is not None, "thermal path needs per-cell stream seeds"
@@ -39,12 +48,11 @@ def ref_llg_rk4(
         g = tmr.conductance_from_cos(nz, p)
         aj = p.stt_prefactor * v * g / p.area
         if thermal_sigma > 0.0:
-            # identical stream to the Pallas kernel: (cells, 2, 3) field from
-            # the same per-lane counters (see kernels/noise.py)
+            # identical stream to the Pallas kernel: (cells, n_sub, 3) field
+            # from the same per-lane counters (see kernels/noise.py)
             d1, d2 = noise.thermal_draws(seeds, i)
-            b_th = thermal_sigma * jnp.stack(
-                [jnp.stack(d1, axis=-1), jnp.stack(d2, axis=-1)], axis=1
-            )
+            triples = [jnp.stack(d1, axis=-1), jnp.stack(d2, axis=-1)]
+            b_th = thermal_sigma * jnp.stack(triples[:n_sub], axis=1)
         else:
             b_th = None
         m_next = rk4_step(lambda mm, tt: llg.llg_rhs(mm, p, aj, b_th), m, 0.0, dt)
@@ -55,8 +63,9 @@ def ref_llg_rk4(
 
     crossed0 = jnp.full((cells,), float(n_steps), jnp.float32)
     (m, crossed), _ = jax.lax.scan(body, (m, crossed0), jnp.arange(n_steps))
+    sub2 = m[:, 1, :].T if n_sub == 2 else jnp.zeros_like(m[:, 0, :].T)
     return jnp.concatenate(
-        [m[:, 0, :].T, m[:, 1, :].T, v[None], crossed[None]], axis=0
+        [m[:, 0, :].T, sub2, v[None], crossed[None]], axis=0
     )
 
 

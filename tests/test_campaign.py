@@ -131,6 +131,45 @@ def test_pack_states_rejects_single_sublattice():
         ops.pack_states(m0, jnp.ones(8))
 
 
+# ------------------------------------------- single-sublattice (FM/MTJ) path
+def test_pack_soa_single_sublattice_layout():
+    """FM states pack with m in rows 0-2, zero rows 3-5, CELL_TILE padding."""
+    from repro.campaign import pack_soa
+    from repro.core.params import MTJ_PARAMS
+    m0 = jax.vmap(lambda t: llg.initial_state(MTJ_PARAMS, t, 0.1))(
+        jnp.linspace(0.01, 0.2, 8))
+    state = pack_soa(m0, jnp.linspace(0.8, 1.2, 8))
+    assert state.shape[0] == 8 and state.shape[1] % 512 == 0
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(state[0:3, :8]), axis=0), 1.0, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(state[3:6]), 0.0)
+
+
+def test_fm_campaign_matches_scan_statistics():
+    """The engine's FM scan tile and the independently-seeded
+    ``write_error_rate_scan`` baseline must agree on MTJ WER within
+    Monte-Carlo error (two RNG implementations, same physics)."""
+    from repro.core.montecarlo import write_error_rate, write_error_rate_scan
+    from repro.core.params import MTJ_PARAMS
+    pulse, n, dt = 1400e-12, 48, 0.2e-12
+    w_engine = write_error_rate(MTJ_PARAMS, 1.0, pulse, n_samples=n, dt=dt)
+    w_scan = float(write_error_rate_scan(MTJ_PARAMS, 1.0, pulse,
+                                         n_samples=n, dt=dt))
+    # binomial std at p~0.5, n=48 is ~0.07; allow ~3 sigma both ways
+    assert abs(w_engine - w_scan) < 0.25, (w_engine, w_scan)
+
+
+def test_fm_wer_monotone_in_pulse():
+    from repro.core.params import MTJ_PARAMS
+    grid = CampaignGrid(voltages=(1.0,),
+                        pulse_widths=(900e-12, 1400e-12, 2000e-12),
+                        n_samples=32, dt=0.2e-12, seed=0)
+    res = run_campaign(MTJ_PARAMS, grid, use_cache=False)
+    w = res.wer()[0]
+    assert (np.diff(w) <= 0).all(), w
+    assert w[0] > w[-1]           # short pulses must actually fail more
+
+
 def test_wer_pulse_axis_is_postprocessing(campaign_result):
     """WER at the longest grid pulse == fraction not crossed by then."""
     ct = campaign_result.crossing_time[0]          # (n_V, n_S) at T0
