@@ -10,19 +10,31 @@ modeled-vs-paper comparison where the paper reports numbers.
   archmap    — beyond-paper: 10 LM archs mapped onto the IMC hierarchy
   kernels    — Pallas kernel microbenches (interpret mode) vs jnp oracle
   mvm        — functional analog MVM (bitline/XNOR kernels) vs jnp einsum
-  wer        — campaign-engine WER surface vs the per-sample scan path
+  wer        — fused multi-temperature campaign (one launch, one compile)
+               vs the old per-temperature-loop engine semantics and the
+               per-sample scan path (DESIGN.md §8)
   write      — stochastic write path: AFMTJ vs MTJ write-verify retries
                (measured latency/energy/retry distributions, paper 8x/9x
-               write ratios from transient dynamics — DESIGN.md §7)
+               write ratios from transient dynamics — DESIGN.md §7), plus
+               the retry-rounds-vs-XLA-compiles pin (§8)
 
 ``--smoke`` shrinks shapes and skips steady-state warmups so CI can exercise
-kernel-vs-reference parity on every push (honored by ``mvm`` and ``write``).
+kernel-vs-reference parity on every push (honored by ``mvm``, ``wer`` and
+``write``).
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
+``--json PATH`` additionally writes every emitted row to a machine-readable
+BENCH.json: ``{name, value, units, wall_us, cold_us}`` per row plus run
+metadata.  Warm rows come from a second (post-compile) call where the bench
+uses ``_t_split``; ``cold_us`` then records the first call, compile
+included — the split the perf trajectory in EXPERIMENTS.md tracks.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only A[,B...]] [--smoke]
+       [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -30,15 +42,44 @@ import jax.numpy as jnp
 import numpy as np
 
 SMOKE = False   # set by --smoke in main()
+RECORDS = []    # BENCH.json rows, appended by emit()
 
 
-def _t(fn, *a, **k):
-    t0 = time.time()
-    out = fn(*a, **k)
+def emit(name, us, derived, units: str = "", cold_us=None):
+    """One benchmark data row: print the CSV line and record it for
+    ``--json``.  ``us`` is the warm wall-clock of the measured call (0 for
+    derived/secondary quantities); ``cold_us`` the compile-included first
+    call where the bench measured one."""
+    print(f"{name},{us:.0f},{derived}")
+    try:
+        value = float(derived)
+    except (TypeError, ValueError):
+        value = str(derived)
+    RECORDS.append({"name": name, "value": value, "units": units,
+                    "wall_us": float(us),
+                    "cold_us": None if cold_us is None else float(cold_us)})
+
+
+def _block(out):
     jax.tree_util.tree_map(
         lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
         out)
+    return out
+
+
+def _t(fn, *a, **k):
+    """Single timed call — compile time folds into the number (cold)."""
+    t0 = time.time()
+    out = _block(fn(*a, **k))
     return out, (time.time() - t0) * 1e6
+
+
+def _t_split(fn, *a, **k):
+    """Cold/warm timing split: first call (compile included), then a second
+    identical call (steady state).  Returns (out, warm_us, cold_us)."""
+    _, cold = _t(fn, *a, **k)
+    out, warm = _t(fn, *a, **k)
+    return out, warm, cold
 
 
 def bench_table1():
@@ -52,9 +93,10 @@ def bench_table1():
     for name, p, n, dt in [("mtj", MTJ_PARAMS, 40000, 0.1e-12),
                            ("afmtj", AFMTJ_PARAMS, 16000, 0.05e-12)]:
         r, us = _t(simulate_write, p, 1.0, n_steps=n, dt=dt)
-        print(f"table1.{name}.tmr_pct,{us:.0f},{tmr_ratio(p)*100:.0f}")
-        print(f"table1.{name}.switch_ps,{us:.0f},{float(r.t_switch)*1e12:.1f}")
-        print(f"table1.{name}.write_fj,{us:.0f},{float(r.energy)*1e15:.1f}")
+        emit(f"table1.{name}.tmr_pct", us, f"{tmr_ratio(p)*100:.0f}", "%")
+        emit(f"table1.{name}.switch_ps", us,
+             f"{float(r.t_switch)*1e12:.1f}", "ps")
+        emit(f"table1.{name}.write_fj", us, f"{float(r.energy)*1e15:.1f}", "fJ")
     print("# paper: MTJ TMR 80-120%, switch 1-2ns, ~300-480fJ; "
           "AFMTJ TMR up to 500% (validated ~80%), 10-100ps, 20-100fJ")
 
@@ -76,8 +118,8 @@ def bench_fig3():
         for i, v in enumerate(np.asarray(voltages)):
             lat = float(r.write_latency[i]) * 1e12
             en = float(r.energy[i]) * 1e15
-            print(f"fig3.{name}.latency_ps@{v:.1f}V,{us/8:.0f},{lat:.1f}")
-            print(f"fig3.{name}.energy_fJ@{v:.1f}V,{us/8:.0f},{en:.1f}")
+            emit(f"fig3.{name}.latency_ps@{v:.1f}V", us / 8, f"{lat:.1f}", "ps")
+            emit(f"fig3.{name}.energy_fJ@{v:.1f}V", us / 8, f"{en:.1f}", "fJ")
     for (v, lat, en), dev in [(PAPER_FIG3_AFMTJ[0], "afmtj"),
                               (PAPER_FIG3_MTJ[0], "mtj")]:
         i = int(np.argmin(np.abs(np.asarray(voltages) - v)))
@@ -88,6 +130,8 @@ def bench_fig3():
               f"(err {100*(ml-lat)/lat:+.1f}%/{100*(me-en)/en:+.1f}%)")
     la = float(out['mtj'].write_latency[5] / out['afmtj'].write_latency[5])
     ea = float(out['mtj'].energy[5] / out['afmtj'].energy[5])
+    emit("fig3.ratio.latency@1.0V", 0, f"{la:.1f}", "x")
+    emit("fig3.ratio.energy@1.0V", 0, f"{ea:.1f}", "x")
     print(f"# ratios@1.0V: latency {la:.1f}x (paper ~8x), energy {ea:.1f}x (paper ~9x)")
 
 
@@ -101,11 +145,12 @@ def bench_fig4():
     for kind in ("afmtj", "mtj"):
         res, us = _t(evaluate_system, kind)
         for name, r in res.items():
-            print(f"fig4.{kind}.{name}.speedup,{us/6:.0f},{r.speedup:.1f}")
-            print(f"fig4.{kind}.{name}.energy_saving,{us/6:.0f},{r.energy_saving:.1f}")
+            emit(f"fig4.{kind}.{name}.speedup", us / 6, f"{r.speedup:.1f}", "x")
+            emit(f"fig4.{kind}.{name}.energy_saving", us / 6,
+                 f"{r.energy_saving:.1f}", "x")
         sp, es = summarize(res)
-        print(f"fig4.{kind}.avg.speedup,{us/6:.0f},{sp:.1f}")
-        print(f"fig4.{kind}.avg.energy_saving,{us/6:.0f},{es:.1f}")
+        emit(f"fig4.{kind}.avg.speedup", us / 6, f"{sp:.1f}", "x")
+        emit(f"fig4.{kind}.avg.energy_saving", us / 6, f"{es:.1f}", "x")
         if kind == "afmtj":
             for w, pv in paper.items():
                 mv = res[w].speedup
@@ -124,18 +169,19 @@ def bench_validation():
 
     print("# validation: TMR + switching-dynamics checks")
     print("name,us_per_call,derived")
-    print(f"validation.tmr_pct,0,{tmr_ratio(AFMTJ_PARAMS)*100:.1f}")
+    emit("validation.tmr_pct", 0, f"{tmr_ratio(AFMTJ_PARAMS)*100:.1f}", "%")
     r, us = _t(simulate_write, AFMTJ_PARAMS, 1.0, n_steps=16000, dt=0.05e-12)
     ps = float(r.t_switch) * 1e12
-    print(f"validation.switch_ps@1V,{us:.0f},{ps:.1f}")
-    print(f"validation.ps_scale_ok,0,{int(10 < ps < 500)}")
+    emit("validation.switch_ps@1V", us, f"{ps:.1f}", "ps")
+    emit("validation.ps_scale_ok", 0, int(10 < ps < 500))
     r_low, _ = _t(simulate_write, AFMTJ_PARAMS, 0.15, n_steps=8000, dt=0.05e-12)
-    print(f"validation.below_threshold_no_switch,0,{int(not bool(r_low.switched))}")
+    emit("validation.below_threshold_no_switch", 0,
+         int(not bool(r_low.switched)))
     # intrinsic switching-latency trend (paper: 65ps@0.5V -> 20ps@1.2V)
     r05, _ = _t(simulate_write, AFMTJ_PARAMS, 0.5, n_steps=16000, dt=0.05e-12)
     r12, _ = _t(simulate_write, AFMTJ_PARAMS, 1.2, n_steps=16000, dt=0.05e-12)
     ratio = float(r05.t_switch / r12.t_switch)
-    print(f"validation.intrinsic_ratio_0p5_1p2,0,{ratio:.2f}")
+    emit("validation.intrinsic_ratio_0p5_1p2", 0, f"{ratio:.2f}", "x")
     print(f"# paper intrinsic ratio 65/20 = 3.25; modeled {ratio:.2f} "
           "(shape reproduced; absolute times ~3-4x paper — see EXPERIMENTS.md)")
 
@@ -150,11 +196,13 @@ def bench_archmap():
     out, us = _t(map_all, ARCHS)
     for kind in ("afmtj", "mtj"):
         for name, r in out[kind].items():
-            print(f"archmap.{kind}.{name}.speedup_vs_cpu,{us/20:.0f},{r.speedup:.1f}")
-            print(f"archmap.{kind}.{name}.energy_saving,{us/20:.0f},"
-                  f"{r.energy_saving:.1f}")
+            emit(f"archmap.{kind}.{name}.speedup_vs_cpu", us / 20,
+                 f"{r.speedup:.1f}", "x")
+            emit(f"archmap.{kind}.{name}.energy_saving", us / 20,
+                 f"{r.energy_saving:.1f}", "x")
     a, m = out["afmtj"], out["mtj"]
     gain = np.mean([a[k].speedup / m[k].speedup for k in a])
+    emit("archmap.afmtj_vs_mtj.mean_decode_gain", 0, f"{gain:.2f}", "x")
     print(f"# afmtj-vs-mtj mean decode speedup gain: {gain:.2f}x")
 
 
@@ -173,20 +221,20 @@ def bench_kernels():
         (ok, uk) = _t(ops.llg_rk4, state, AFMTJ_PARAMS, 0.1e-12, steps)
         (orf, ur) = _t(ref.ref_llg_rk4, state, AFMTJ_PARAMS, 0.1e-12, steps)
         err = float(jnp.max(jnp.abs(ok[0][:6] - orf[0][:6]))) if isinstance(ok, tuple) else float(jnp.max(jnp.abs(ok[:6] - orf[:6])))
-        print(f"kernels.llg_rk4.{steps}steps,{uk:.0f},maxerr={err:.1e}")
-        print(f"kernels.llg_rk4_ref.{steps}steps,{ur:.0f},1")
+        emit(f"kernels.llg_rk4.{steps}steps", uk, f"maxerr={err:.1e}")
+        emit(f"kernels.llg_rk4_ref.{steps}steps", ur, 1)
     v = jax.random.uniform(jax.random.PRNGKey(0), (256, 512))
     g = jax.random.uniform(jax.random.PRNGKey(1), (512, 256)) * 3.4e-4
     (o1, u1) = _t(ops.bitline_mac, v, g, 6, i_max=0.05)
     (o2, u2) = _t(ref.ref_bitline_mac, v, g, 6, i_max=0.05)
-    print(f"kernels.bitline_mac.256x512x256,{u1:.0f},"
-          f"match={int(bool(jnp.allclose(o1, o2, rtol=1e-5)))}")
+    emit("kernels.bitline_mac.256x512x256", u1,
+         f"match={int(bool(jnp.allclose(o1, o2, rtol=1e-5)))}")
     a = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), (256, 512)))
     w = jnp.sign(jax.random.normal(jax.random.PRNGKey(3), (512, 256)))
     (o3, u3) = _t(ops.xnor_gemm, a, w)
     (o4, u4) = _t(ref.ref_xnor_gemm, a, w)
-    print(f"kernels.xnor_gemm.256x512x256,{u3:.0f},"
-          f"match={int(bool(jnp.allclose(o3, o4)))}")
+    emit("kernels.xnor_gemm.256x512x256", u3,
+         f"match={int(bool(jnp.allclose(o3, o4)))}")
 
 
 def bench_mvm():
@@ -213,12 +261,14 @@ def bench_mvm():
     cfg = AnalogConfig(adc_bits=6)
     arr = program_weights(w, "afmtj", cfg)
     einsum = jax.jit(lambda a, b: jnp.einsum("mk,kn->mn", a, b))
-    if not SMOKE:   # steady-state: warm both compiles out of the timings
-        analog_matmul(arr, x).block_until_ready()
-        einsum(x, w).block_until_ready()
-    y_a, us_a = _t(analog_matmul, arr, x)
+    if SMOKE:   # one timed call each — parity is what CI is after
+        y_a, us_a = _t(analog_matmul, arr, x)
+        us_a_cold = None
+    else:       # steady state, with the compile cost split out
+        y_a, us_a, us_a_cold = _t_split(analog_matmul, arr, x)
     mse = float(np.mean((np.asarray(y_a) - y_f32) ** 2))
-    print(f"mvm.analog.adc6,{us_a:.0f},nmse={mse/np.mean(y_f32**2):.2e}")
+    emit("mvm.analog.adc6", us_a, f"nmse={mse/np.mean(y_f32**2):.2e}",
+         cold_us=us_a_cold)
 
     # parity: the kernel output must match the jnp oracle on the exact
     # operands analog_matmul fed the kernel
@@ -229,99 +279,154 @@ def bench_mvm():
                      np.asarray(ref.ref_bitline_mac(v, arr.g_diff, 6,
                                                     i_max=i_max)),
                      rtol=1e-5, atol=i_max / 31 * 1.001)
-    print(f"mvm.analog.kernel_vs_ref,0,match={int(ok)}")
+    emit("mvm.analog.kernel_vs_ref", 0, f"match={int(ok)}")
 
-    (y_e, us_e) = _t(einsum, x, w)
-    print(f"mvm.einsum_f32,{us_e:.0f},baseline")
-    print(f"mvm.analog_over_einsum,0,{us_a/max(us_e,1e-9):.1f}")
+    if SMOKE:
+        y_e, us_e = _t(einsum, x, w)
+        us_e_cold = None
+    else:
+        y_e, us_e, us_e_cold = _t_split(einsum, x, w)
+    emit("mvm.einsum_f32", us_e, "baseline", cold_us=us_e_cold)
+    emit("mvm.analog_over_einsum", 0, f"{us_a/max(us_e,1e-9):.1f}", "x")
 
     y_b, us_b = _t(binary_matmul, x, w)
     mse_b = float(np.mean((np.asarray(y_b) - y_f32) ** 2))
-    print(f"mvm.bnn.xnor,{us_b:.0f},nmse={mse_b/np.mean(y_f32**2):.2e}")
+    emit("mvm.bnn.xnor", us_b, f"nmse={mse_b/np.mean(y_f32**2):.2e}")
     from repro.kernels.ops import xnor_gemm
     xb, wb = binarize_acc(x, 1), binarize_acc(w, 1)
     ok_b = np.array_equal(np.asarray(xnor_gemm(xb, wb)),
                           np.asarray(ref.ref_xnor_gemm(xb, wb)))
-    print(f"mvm.bnn.kernel_vs_ref,0,match={int(ok_b)}")
+    emit("mvm.bnn.kernel_vs_ref", 0, f"match={int(ok_b)}")
     print("# analog path adds programming+ADC on top of the matmul; on TPU "
           "the kernel runs compiled (interpret-mode timings are CPU-only)")
 
 
 def bench_wer():
-    """Campaign engine: WER(voltage, pulse) surface through the Pallas
-    thermal kernel, vs the per-sample scan path in core/montecarlo.py —
-    the reliability spec a write controller binds against."""
+    """Fused-temperature campaign engine: the whole (T x V x S) reliability
+    grid rides ONE kernel launch with ONE compile (per-lane Brown sigma +
+    chunked early exit, DESIGN.md §8), measured against
+
+    * the old engine semantics — a per-temperature loop of fixed-horizon
+      launches, each synced before the next is dispatched (and, in the
+      removed sigma-as-compile-time-scalar engine, each temperature also
+      paid its own XLA compile — the cold column is the honest comparison
+      there), and
+    * (full mode) the per-sample scan path in core/montecarlo.py.
+
+    Smoke mode shrinks the grid but keeps >= 3 temperature points so CI
+    exercises the fused-T path on every push."""
     from repro.campaign import CampaignGrid, run_campaign
-    from repro.core.montecarlo import write_error_rate_scan
+    from repro.campaign.engine import _integrate_sharded
     from repro.core.params import AFMTJ_PARAMS
     from repro.imc.write_margin import wer_margined_pulse
 
-    voltages = (0.6, 0.8, 1.0, 1.2)
-    pulses = tuple(x * 1e-12 for x in (100, 150, 200, 250, 300, 350, 400))
-    n_samples = 128                       # 4 V x 128 S fills one CELL_TILE
-    grid = CampaignGrid(voltages=voltages, pulse_widths=pulses,
-                        n_samples=n_samples, dt=0.1e-12, seed=0)
-    print("# wer: campaign engine WER(V, pulse) surface "
-          f"({len(voltages)}V x {len(pulses)}P x {n_samples}S, "
-          f"{grid.n_steps} steps)")
+    temps = (260.0, 300.0, 340.0)
+    if SMOKE:
+        voltages, n_samples = (1.0, 1.2), 256
+        pulses = tuple(x * 1e-12 for x in (150, 250, 350))
+    else:
+        voltages, n_samples = (0.8, 1.0, 1.2), 512
+        pulses = tuple(x * 1e-12 for x in (100, 150, 200, 250, 300, 350, 400))
+
+    def mk(t):
+        return CampaignGrid(voltages=voltages, pulse_widths=pulses,
+                            temperatures=t, n_samples=n_samples,
+                            dt=0.1e-12, seed=0)
+
+    grid, singles = mk(temps), [mk((t,)) for t in temps]
+    print(f"# wer: fused (T x V x S) campaign {len(temps)}T x "
+          f"{len(voltages)}V x {n_samples}S, {len(pulses)} pulses, "
+          f"{grid.n_steps} steps ({'smoke' if SMOKE else 'full'})")
     print("name,us_per_call,derived")
 
-    # steady-state comparison: warm the engine AND every scan pulse width
-    # (pulse_s is a jit static, so each pulse is its own compile — excluded
-    # here; note that in real campaigns the scan path pays that recompile
-    # per pulse point while the engine never does)
-    warm = CampaignGrid(voltages=voltages, pulse_widths=pulses,
-                        n_samples=n_samples, dt=0.1e-12, seed=1)
-    run_campaign(AFMTJ_PARAMS, warm, use_cache=False)
-    for pl_ in pulses:
-        write_error_rate_scan(AFMTJ_PARAMS, 1.0, pl_,
-                              n_samples=32).block_until_ready()
+    # fused: one launch / one compile for the whole plane
+    _integrate_sharded._clear_cache()
+    res, us_fused, us_fused_cold = _t_split(
+        lambda: run_campaign(AFMTJ_PARAMS, grid, use_cache=False))
+    compiles = _integrate_sharded._cache_size()
+    n = res.n_samples_total
+    emit("wer.fused.temperature_points", 0, len(temps))
+    emit("wer.fused.launches", 0, res.n_launches)
+    emit("wer.fused.xla_compiles", 0, compiles)
+    emit("wer.fused_one_launch_ok", 0,
+         int(res.n_launches == 1 and compiles == 1))
+    emit("wer.fused.us_per_sample", us_fused / n, n, "us/sample",
+         cold_us=us_fused_cold / n)
 
-    res, us_engine = _t(lambda: run_campaign(AFMTJ_PARAMS, grid,
-                                             use_cache=False))
-    wer = res.wer()
-    for i, v in enumerate(voltages):
-        for j in (0, 3, 6):               # print a readable subset
-            print(f"wer.afmtj.{v:.1f}V.{pulses[j]*1e12:.0f}ps,"
-                  f"{us_engine/res.n_samples_total:.0f},{wer[i, j]:.3f}")
+    # old engine semantics: one fixed-horizon launch per temperature,
+    # host-synced before the next dispatch (chunk=0 disables early exit
+    # and horizon quantization — exactly the pre-fusion integration)
+    def per_t_loop():
+        return [run_campaign(AFMTJ_PARAMS, g, use_cache=False, chunk=0)
+                for g in singles]
+
+    _, us_loop, us_loop_cold = _t_split(per_t_loop)
+    emit("wer.per_t_loop.us_per_sample", us_loop / n, n, "us/sample",
+         cold_us=us_loop_cold / n)
+    emit("wer.fused_over_per_t_loop", 0, f"{us_loop/us_fused:.2f}", "x")
+    print(f"# fused {us_fused/n:.0f} us/sample (1 launch, {compiles} "
+          f"compile) vs per-T loop {us_loop/n:.0f} us/sample "
+          f"({len(temps)} launches) -> {us_loop/us_fused:.2f}x")
+
+    wer = res.wer_surface()                       # (T, V, P)
+    for ti in (0, len(temps) - 1):
+        for j in (0, len(pulses) - 1):
+            emit(f"wer.afmtj.{temps[ti]:.0f}K.{voltages[0]:.1f}V."
+                 f"{pulses[j]*1e12:.0f}ps", us_fused / n,
+                 f"{wer[ti, 0, j]:.3f}")
+
+    if SMOKE:
+        return
 
     # scan baseline: producing the same pulse axis takes one integration
     # per (V, pulse) point — time the 1.0 V row, 32 samples each, warmed
+    from repro.core.montecarlo import write_error_rate_scan
+    for pl_ in pulses:
+        write_error_rate_scan(AFMTJ_PARAMS, 1.0, pl_,
+                              n_samples=32).block_until_ready()
     us_scan_total, scan_runs = 0.0, 0
     for pl_ in pulses:
         w, us = _t(write_error_rate_scan, AFMTJ_PARAMS, 1.0, pl_,
                    n_samples=32)
         us_scan_total += us / 32          # us per sample at this pulse
         scan_runs += 1
-        if pl_ in (pulses[0], pulses[3], pulses[6]):
-            print(f"wer.scan.1.0V.{pl_*1e12:.0f}ps,{us/32:.0f},{float(w):.3f}")
+        if pl_ in (pulses[0], pulses[-1]):
+            emit(f"wer.scan.1.0V.{pl_*1e12:.0f}ps", us / 32, f"{float(w):.3f}")
 
     # per *sample of the full surface*: one engine sample covers every
     # pulse width (first-crossing post-processing); a scan sample must be
     # re-integrated once per pulse point
-    us_engine_per = us_engine / res.n_samples_total
-    us_scan_per = us_scan_total           # summed over the pulse axis
-    print(f"wer.engine.us_per_sample,{us_engine_per:.0f},"
-          f"{res.n_samples_total}")
-    print(f"wer.scan.us_per_sample,{us_scan_per:.0f},{scan_runs * 32}")
-    print(f"# engine {us_engine_per:.0f} us/sample (all {len(pulses)} "
-          f"pulses) vs scan {us_scan_per:.0f} us/sample (re-integrated per "
-          f"pulse, steady-state) -> {us_scan_per/us_engine_per:.1f}x fewer "
+    emit("wer.engine.us_per_sample", us_fused / n, n, "us/sample")
+    emit("wer.scan.us_per_sample", us_scan_total, scan_runs * 32, "us/sample")
+    print(f"# engine {us_fused/n:.0f} us/sample (all {len(pulses)} "
+          f"pulses) vs scan {us_scan_total:.0f} us/sample (re-integrated per "
+          f"pulse, steady-state) -> {us_scan_total/(us_fused/n):.1f}x fewer "
           "us per sample (target >= 5x)")
 
     pulse = wer_margined_pulse("afmtj", 1.0, wer_target=1e-2, n_samples=128)
-    print(f"wer.margin_pulse_ps@1V.wer1e-2,0,{pulse*1e12:.0f}")
+    emit("wer.margin_pulse_ps@1V.wer1e-2", 0, f"{pulse*1e12:.0f}", "ps")
+    # operating-range margin: worst case over the corner temperatures, one
+    # fused launch for the whole (T x ladder) grid
+    pulse_rng = wer_margined_pulse("afmtj", 1.0, wer_target=1e-2,
+                                   n_samples=128, temperatures=temps)
+    emit("wer.margin_pulse_ps@1V.wer1e-2.range", 0,
+         f"{pulse_rng*1e12:.0f}", "ps")
     print("# mean intrinsic t_sw ~123ps; the WER<=1e-2 pulse covers the "
-          "thermal tail the IMC controller schedules against")
+          "thermal tail the IMC controller schedules against (range = "
+          f"worst case over {temps[0]:.0f}-{temps[-1]:.0f} K)")
 
 
 def bench_write():
     """Stochastic write path: write-verify retry programming at 1.0 V,
     AFMTJ vs MTJ — the paper's headline write ratios (~8x latency, ~9x
     energy) reproduced from thermal LLG transients + retries instead of
-    the deterministic single-pulse constants.  Full mode additionally
-    reruns the Fig. 4 system comparison with the measured p99 row write
-    time threaded through the pipelined stage model."""
+    the deterministic single-pulse constants.  Also pins the §8 compile
+    economics: a shrinking multi-round retry schedule stays within its
+    shape-bucket compile budget (fewer XLA compiles than rounds).  Full
+    mode additionally reruns the Fig. 4 system comparison with the
+    measured p99 row write time threaded through the pipelined stage
+    model."""
+    from repro.campaign.engine import _integrate_sharded
     from repro.imc.write_path import WritePolicy, write_verify
 
     n_cells = 64 if SMOKE else 1024
@@ -335,21 +440,23 @@ def bench_write():
         r, us = _t(lambda k=kind, p=pol: write_verify(k, n_cells, p))
         res[kind] = r
         hist = "/".join(str(int(c)) for c in r.retry_histogram()[1:])
-        print(f"write.{kind}.pulse_ps,{us:.0f},{r.pulse*1e12:.0f}")
-        print(f"write.{kind}.single_pulse_wer,0,{r.single_pulse_wer:.3f}")
-        print(f"write.{kind}.attempts_mean,0,{r.attempts_mean:.2f}")
-        print(f"write.{kind}.retry_hist,0,{hist}")
-        print(f"write.{kind}.latency_mean_ps,0,{r.latency.mean()*1e12:.0f}")
-        print(f"write.{kind}.latency_p99_ps,0,"
-              f"{r.latency_percentile(99.0)*1e12:.0f}")
-        print(f"write.{kind}.energy_mean_fj,0,{r.energy_mean()*1e15:.1f}")
-        print(f"write.{kind}.residual_ber,0,{r.residual_ber:.4f}")
+        emit(f"write.{kind}.pulse_ps", us, f"{r.pulse*1e12:.0f}", "ps")
+        emit(f"write.{kind}.single_pulse_wer", 0, f"{r.single_pulse_wer:.3f}")
+        emit(f"write.{kind}.attempts_mean", 0, f"{r.attempts_mean:.2f}")
+        emit(f"write.{kind}.retry_hist", 0, hist)
+        emit(f"write.{kind}.latency_mean_ps", 0,
+             f"{r.latency.mean()*1e12:.0f}", "ps")
+        emit(f"write.{kind}.latency_p99_ps", 0,
+             f"{r.latency_percentile(99.0)*1e12:.0f}", "ps")
+        emit(f"write.{kind}.energy_mean_fj", 0, f"{r.energy_mean()*1e15:.1f}",
+             "fJ")
+        emit(f"write.{kind}.residual_ber", 0, f"{r.residual_ber:.4f}")
 
     la = res["mtj"].latency.mean() / res["afmtj"].latency.mean()
     ea = res["mtj"].energy_mean() / res["afmtj"].energy_mean()
-    print(f"write.ratio.latency,0,{la:.1f}")
-    print(f"write.ratio.energy,0,{ea:.1f}")
-    print(f"write.ratio_ok,0,{int(5.0 < la < 13.0 and 5.0 < ea < 13.0)}")
+    emit("write.ratio.latency", 0, f"{la:.1f}", "x")
+    emit("write.ratio.energy", 0, f"{ea:.1f}", "x")
+    emit("write.ratio_ok", 0, int(5.0 < la < 13.0 and 5.0 < ea < 13.0))
     print("# paper @1.0V: ~8x latency, ~9x energy (Fig. 3 anchors; see "
           "EXPERIMENTS.md §Write-path for documented deviations)")
 
@@ -360,10 +467,25 @@ def bench_write():
     pol_eq = WritePolicy(v_write=1.0, pulse=tp, max_attempts=3, seed=0)
     r_a, _ = _t(lambda: write_verify("afmtj", n_cells, pol_eq))
     r_m, _ = _t(lambda: write_verify("mtj", n_cells, pol_eq))
-    print(f"write.equal_pulse.afmtj_attempts,0,{r_a.attempts_mean:.2f}")
-    print(f"write.equal_pulse.mtj_attempts,0,{r_m.attempts_mean:.2f}")
-    print(f"write.equal_pulse_retries_ok,0,"
-          f"{int(r_m.attempts_mean > r_a.attempts_mean)}")
+    emit("write.equal_pulse.afmtj_attempts", 0, f"{r_a.attempts_mean:.2f}")
+    emit("write.equal_pulse.mtj_attempts", 0, f"{r_m.attempts_mean:.2f}")
+    emit("write.equal_pulse_retries_ok", 0,
+         int(r_m.attempts_mean > r_a.attempts_mean))
+
+    # recompile-free retry rounds: a schedule whose still-unwritten set
+    # shrinks 640 -> ~300 -> ~130 -> ... lands on two shape buckets (1024,
+    # 512), so XLA compiles stay below the round count (DESIGN.md §8)
+    _integrate_sharded._clear_cache()
+    pol_c = WritePolicy(v_write=1.0, pulse=130e-12, max_attempts=4, seed=1,
+                        use_cache=False)
+    r_c, us_c = _t(lambda: write_verify("afmtj", 640, pol_c))
+    compiles = _integrate_sharded._cache_size()
+    emit("write.retry.rounds", us_c, r_c.rounds)
+    emit("write.retry.xla_compiles", 0, compiles)
+    emit("write.compiles_lt_rounds_ok", 0, int(compiles < r_c.rounds))
+    print(f"# {r_c.rounds} retry rounds over a shrinking cell set -> "
+          f"{compiles} XLA compiles (shape buckets; pre-§8 engine paid "
+          "one compile per distinct round shape)")
 
     if SMOKE:
         return
@@ -379,13 +501,13 @@ def bench_write():
         sp_n, es_n = summarize(sys_n)
         sp_p, es_p = summarize(sys_p)
         r0 = sys_p["mat_add"]
-        print(f"write.fig4.{kind}.avg_speedup_nominal,{us_n:.0f},{sp_n:.1f}")
-        print(f"write.fig4.{kind}.avg_speedup_p99,{us_p:.0f},{sp_p:.1f}")
-        print(f"write.fig4.{kind}.avg_energy_saving_p99,0,{es_p:.1f}")
-        print(f"write.fig4.{kind}.mat_add_t_write_op_ps,0,"
-              f"{r0.t_write_op*1e12:.0f}")
-        print(f"write.fig4.{kind}.mat_add_write_attempts,0,"
-              f"{r0.write_attempts:.2f}")
+        emit(f"write.fig4.{kind}.avg_speedup_nominal", us_n, f"{sp_n:.1f}", "x")
+        emit(f"write.fig4.{kind}.avg_speedup_p99", us_p, f"{sp_p:.1f}", "x")
+        emit(f"write.fig4.{kind}.avg_energy_saving_p99", 0, f"{es_p:.1f}", "x")
+        emit(f"write.fig4.{kind}.mat_add_t_write_op_ps", 0,
+             f"{r0.t_write_op*1e12:.0f}", "ps")
+        emit(f"write.fig4.{kind}.mat_add_write_attempts", 0,
+             f"{r0.write_attempts:.2f}")
 
 
 BENCHES = {
@@ -404,17 +526,46 @@ BENCHES = {
 def main() -> None:
     global SMOKE
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=sorted(BENCHES), default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names "
+                         f"(choices: {','.join(sorted(BENCHES))})")
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes, no steady-state warmup (CI parity run)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write every emitted row + run metadata to PATH "
+                         "(BENCH.json)")
     args = ap.parse_args()
     SMOKE = args.smoke
-    names = [args.only] if args.only else list(BENCHES)
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in BENCHES]
+        if unknown:
+            ap.error(f"unknown benchmark(s) {unknown}; "
+                     f"choices: {sorted(BENCHES)}")
+    else:
+        names = list(BENCHES)
     t0 = time.time()
     for n in names:
         print(f"\n=== {n} " + "=" * (60 - len(n)))
         BENCHES[n]()
-    print(f"\ntotal {time.time()-t0:.1f}s")
+    total = time.time() - t0
+    print(f"\ntotal {total:.1f}s")
+    if args.json:
+        payload = {
+            "meta": {
+                "benches": names,
+                "smoke": SMOKE,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+                "jax": jax.__version__,
+                "total_s": round(total, 3),
+                "unix_time": int(time.time()),
+            },
+            "benchmarks": RECORDS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {len(RECORDS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,29 @@
-"""Thermal Monte-Carlo campaign engine (DESIGN.md §5).
+"""Thermal Monte-Carlo campaign engine (DESIGN.md §5, §8).
 
-Packs (voltage x pulse x temperature x sample) reliability grids into the
-Pallas thermal LLG kernel's ``(8, cells)`` SoA layout, shards cell tiles
-across devices, and reduces first-crossing steps into WER / latency
-surfaces with on-disk result caching.
+Packs (temperature x voltage x pulse x sample) reliability grids into the
+Pallas thermal LLG kernel's ``(8, cells)`` SoA layout — temperature rides
+the lanes as a per-lane Brown sigma, so a whole campaign is one launch
+with one compile — shards cell tiles across devices, and reduces
+first-crossing steps into WER / latency surfaces with on-disk result
+caching.
 
-  grid    — CampaignGrid axes + SoA packing
-  engine  — run_campaign / run_ensemble + surface reductions
+  grid    — CampaignGrid axes + SoA packing (fused-T plane, shape buckets)
+  engine  — run_campaign / run_ensemble + surface reductions + early exit
   cache   — content-addressed npz result cache
 """
 from repro.campaign.cache import campaign_key  # noqa: F401
 from repro.campaign.engine import (  # noqa: F401
+    EARLY_EXIT_CHUNK,
     CampaignResult,
     EnsembleResult,
     brown_sigma,
     run_campaign,
     run_ensemble,
 )
-from repro.campaign.grid import CampaignGrid, pack_plane, pack_soa  # noqa: F401
+from repro.campaign.grid import (  # noqa: F401
+    CampaignGrid,
+    bucket_cells,
+    pack_campaign,
+    pack_plane,
+    pack_soa,
+)

@@ -26,8 +26,17 @@ import numpy as np
 from repro.core.params import DeviceParams
 
 # bump when the kernel's noise stream or integration scheme changes — old
-# cached surfaces are then silently invalidated (different key)
-KERNEL_VERSION = 2
+# cached surfaces are then silently invalidated (different key).
+# v3: fused-temperature launch layout (per-lane sigma + step-budget aux
+# plane, bucketed lane padding, chunked early exit).  Crossing tensors are
+# designed to be bit-identical to v2 (the per-lane streams and per-step
+# update order are unchanged — tests/test_fused_engine.py pins the fused
+# vs per-T equality), but the launch layout changed enough that a
+# conservative invalidation is cheaper than any risk of a stale surface.
+KERNEL_VERSION = 3
+# covered by the key so future packing changes (lane order, bucket rule)
+# can invalidate independently of the physics version
+CELLS_LAYOUT = "fused-T/bucket-pow2"
 
 DEFAULT_CACHE_DIR = os.environ.get(
     "REPRO_CAMPAIGN_CACHE", os.path.join(os.path.expanduser("~"),
@@ -38,6 +47,7 @@ def campaign_key(p: DeviceParams, grid, backend: str) -> str:
     """Content hash of everything the crossing-time tensor depends on."""
     payload = {
         "v": KERNEL_VERSION,
+        "layout": CELLS_LAYOUT,
         "params": dataclasses.asdict(p),
         "grid": dataclasses.asdict(grid),
         "backend": backend,

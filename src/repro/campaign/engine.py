@@ -1,25 +1,42 @@
-"""Monte-Carlo campaign engine: one kernel launch per (temperature) tile.
+"""Monte-Carlo campaign engine: one kernel launch for the whole campaign.
 
 Replaces the per-sample host-visible scan in ``core.montecarlo`` (O(steps)
 XLA while-loop per sample, threefry keys split per step) with the Pallas
-thermal LLG kernel: the whole (voltage x sample) plane rides in one
-``(8, cells)`` SoA launch, per-lane counter-RNG streams supply the thermal
-field in-kernel, and the pulse-width axis falls out of the recorded
-first-crossing steps for free (see ``grid.py``).
+thermal LLG kernel — and packs *every* campaign axis that isn't pure
+post-processing into the kernel's cells plane:
+
+* voltage x sample ride the lanes (PR 1);
+* pulse width falls out of the recorded first-crossing steps (PR 1);
+* temperature rides the lanes too: Brown's sigma is a per-lane kernel
+  input (aux plane), so a (T x V x S) grid is **one launch, one compile**
+  instead of a host-level loop with one sigma-specialized recompile per
+  temperature (``grid.pack_campaign``).
+
+No wasted steps either: the kernel integrates in chunks and exits a tile
+as soon as every lane has crossed or exhausted its per-lane step budget
+(``EARLY_EXIT_CHUNK``), and the compiled horizon is quantized to a power
+of two (``_quantize_steps``) so campaigns with different pulse ladders
+share compiles — the per-lane budget row stops the integration at the
+*true* horizon, and crossing rows stay bit-identical to a fixed-horizon
+run (``tests/test_fused_engine.py`` pins this).
 
 Scaling: the cells axis is embarrassingly parallel, so the engine shards
 cell tiles across every visible device with ``shard_map`` — each device
 integrates its own ``cells / n_dev`` lanes (a multiple of the kernel's
-CELL_TILE), no cross-device communication at all.  Results are reduced
-host-side into WER / latency-percentile surfaces and cached on disk
-(``cache.py``) keyed by the full campaign content hash.
+CELL_TILE), no cross-device communication at all.  Launches above
+``max_cells_per_launch`` split along temperature-slice boundaries and are
+all dispatched asynchronously before the first ``block_until_ready`` —
+the host never serializes device work against transfers.  Results are
+reduced host-side into WER / latency-percentile surfaces and cached on
+disk (``cache.py``) keyed by the full campaign content hash.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
-from typing import Optional, Sequence, Tuple
+import warnings
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,12 +45,19 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.campaign import cache as _cache
-from repro.campaign.grid import CampaignGrid, pack_plane, pack_soa
+from repro.campaign.grid import (CampaignGrid, next_pow2, pack_campaign,
+                                 pack_soa)
 from repro.core.montecarlo import thermal_sigma
 from repro.core.params import DeviceParams
 from repro.kernels import noise, ref
 from repro.kernels.llg_rk4 import CELL_TILE, llg_rk4_pallas
 from repro.kernels.ops import _default_interpret
+
+# Early-exit granularity [steps]: the kernel checks "is every lane done?"
+# once per chunk.  Small enough that a finished tile wastes < chunk steps,
+# large enough that the all-lane reduction is noise next to the ~60
+# flops/step/lane RK4 body.
+EARLY_EXIT_CHUNK = 64
 
 
 def brown_sigma(p: DeviceParams, dt: float, temperature: Optional[float] = None
@@ -45,34 +69,57 @@ def brown_sigma(p: DeviceParams, dt: float, temperature: Optional[float] = None
     return thermal_sigma(p, dt)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "p", "dt", "n_steps", "sigma", "switch_threshold", "backend", "n_dev"))
-def _integrate_sharded(state, seeds, *, p: DeviceParams, dt: float,
-                       n_steps: int, sigma: float, switch_threshold: float,
-                       backend: str, n_dev: int):
-    """Advance a (8, cells) block on ``n_dev`` devices (cells sharded)."""
+def _quantize_steps(n_steps: int) -> int:
+    """Round the compiled horizon up to a power of two.
 
-    def tile_fn(st, sd):
+    The per-lane step-budget row stops every lane at the *true* horizon,
+    and the chunked loop exits a tile within one chunk of its slowest
+    lane's budget — so the masked tail costs ~nothing at runtime while
+    campaigns over different pulse ladders (write-verify sweeps, margin
+    ladders) land on a logarithmic number of compiled step counts.
+    """
+    return next_pow2(n_steps)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "p", "dt", "n_steps", "switch_threshold", "backend", "n_dev", "chunk"))
+def _integrate_sharded(state, seeds, sigma, budget, *, p: DeviceParams,
+                       dt: float, n_steps: int, switch_threshold: float,
+                       backend: str, n_dev: int, chunk: int):
+    """Advance a (8, cells) block on ``n_dev`` devices (cells sharded).
+
+    Everything that varies *within* a campaign — or between retry rounds
+    of a write-verify schedule — is traced data: per-lane Brown sigma,
+    per-lane step budgets, per-lane RNG stream seeds, initial states and
+    drive voltages.  The only compile keys left are the device physics
+    ``p``, the step size, the (quantized) horizon, and the launch shape
+    (bucketed by ``grid.bucket_cells``).
+    """
+
+    def tile_fn(st, sd, sg, bd):
         # the SoA Pallas kernel is dual-sublattice by construction
         # (staggered Neel STT); single-sublattice FM/MTJ devices integrate
         # the same production physics through the oracle's lane-vectorized
         # scan — same grids, padding, RNG streams, first-crossing row 7
         if p.n_sublattices == 1 or backend == "ref":
             return ref.ref_llg_rk4(st, p, dt, n_steps, switch_threshold,
-                                   thermal_sigma=sigma, seeds=sd)
+                                   thermal_sigma=sg, seeds=sd,
+                                   step_budget=bd, chunk=chunk)
         return llg_rk4_pallas(st, p, dt, n_steps, switch_threshold,
                               interpret=_default_interpret(),
-                              thermal_sigma=sigma, seeds=sd)
+                              thermal_sigma=sg, seeds=sd,
+                              step_budget=bd, chunk=chunk)
 
     if n_dev == 1:
-        return tile_fn(state, seeds)
+        return tile_fn(state, seeds, sigma, budget)
     mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("cells",))
     # check_rep=False: shard_map has no replication rule for pallas_call;
     # every output is fully sharded along cells anyway
     fn = shard_map(tile_fn, mesh=mesh,
-                   in_specs=(P(None, "cells"), P("cells")),
+                   in_specs=(P(None, "cells"), P("cells"), P("cells"),
+                             P("cells")),
                    out_specs=P(None, "cells"), check_rep=False)
-    return fn(state, seeds)
+    return fn(state, seeds, sigma, budget)
 
 
 def _usable_devices(cells_padded: int, devices: Optional[int]) -> int:
@@ -88,7 +135,7 @@ def _usable_devices(cells_padded: int, devices: Optional[int]) -> int:
 @dataclasses.dataclass(frozen=True)
 class EnsembleResult:
     """One thermal ensemble integration (a single campaign tile)."""
-    final_state: np.ndarray      # (8, cells) SoA after n_steps
+    final_state: np.ndarray      # (8, cells) SoA at loop exit
     crossing_steps: np.ndarray   # (cells,) first crossing (== n_steps: none)
     n_steps: int
     dt: float
@@ -115,18 +162,24 @@ def run_ensemble(
     backend: str = "pallas",
     switch_threshold: float = 0.9,
     devices: Optional[int] = None,
+    chunk: int = 0,
 ) -> EnsembleResult:
     """Integrate an arbitrary thermal ensemble through the kernel path.
 
     The general entry point (used by ``examples/array_mc_sim.py`` for
-    per-cell IR-drop voltage maps and by ``imc.write_path`` for write-verify
-    rounds); ``run_campaign`` packs structured (V x S) grids on top of it.
-    ``temperature=None`` uses ``p.temperature``; ``temperature=0`` (or
-    alpha/volume making sigma 0) falls back to the deterministic kernel.
-    Single-sublattice devices (``p.n_sublattices == 1``, the MTJ baseline)
-    integrate through the ``kernels.ref.ref_llg_rk4`` scan — same API,
-    grids and reductions, no Pallas kernel (the SoA kernel is
-    dual-sublattice only).
+    per-cell IR-drop voltage maps); ``run_campaign`` packs structured
+    (T x V x S) grids on top of the same kernel.  ``temperature=None``
+    uses ``p.temperature``; ``temperature=0`` (or alpha/volume making
+    sigma 0) zeroes the per-lane thermal field (numerically identical to
+    the deterministic kernel).  Single-sublattice devices
+    (``p.n_sublattices == 1``, the MTJ baseline) integrate through the
+    ``kernels.ref.ref_llg_rk4`` scan — same API, grids and reductions, no
+    Pallas kernel (the SoA kernel is dual-sublattice only).
+
+    ``chunk > 0`` turns on chunked early exit: crossing rows are
+    bit-identical to the fixed-horizon default, but ``final_state`` then
+    holds the at-exit state (lanes stop within one chunk of the last
+    crossing) rather than the state after the full horizon.
 
     Never-switched lanes report ``crossing_steps == n_steps`` (so
     ``crossing_time == n_steps*dt``); when thresholding crossings against a
@@ -136,19 +189,24 @@ def run_ensemble(
     cells = m0.shape[0]
     state = pack_soa(m0, jnp.asarray(voltages, jnp.float32))
     padded = state.shape[1]
-    sigma = brown_sigma(p, dt, temperature)
+    sigma_t = brown_sigma(p, dt, temperature)
+    sigma = jnp.full((padded,), float(sigma_t), jnp.float32)
+    budget = jnp.where(jnp.arange(padded) < cells, float(n_steps),
+                       0.0).astype(jnp.float32)
     seeds = noise.cell_seeds(seed, padded)
     n_dev = _usable_devices(padded, devices)
 
     t0 = time.time()
     out = _integrate_sharded(
-        state, seeds, p=p, dt=dt, n_steps=n_steps, sigma=float(sigma),
+        state, seeds, sigma, budget, p=p, dt=dt, n_steps=n_steps,
         switch_threshold=float(switch_threshold), backend=backend,
-        n_dev=n_dev)
+        n_dev=n_dev, chunk=int(chunk))
     out = np.asarray(jax.block_until_ready(out))
     elapsed = time.time() - t0
     return EnsembleResult(
-        final_state=out[:, :cells], crossing_steps=out[7, :cells],
+        final_state=out[:, :cells],
+        crossing_steps=np.minimum(out[7, :cells].astype(np.float64),
+                                  float(n_steps)),
         n_steps=n_steps, dt=dt, elapsed_s=elapsed)
 
 
@@ -160,6 +218,7 @@ class CampaignResult:
     crossing_time: np.ndarray        # (n_T, n_V, n_S) seconds
     elapsed_s: float                 # integration wall-clock (0 on cache hit)
     from_cache: bool = False
+    n_launches: int = 1              # kernel launches this result took
 
     @property
     def n_samples_total(self) -> int:
@@ -182,17 +241,17 @@ class CampaignResult:
     def latency_percentiles(self, qs: Sequence[float] = (50.0, 99.0)
                             ) -> np.ndarray:
         """(n_T, n_V, len(qs)) switching-latency percentiles over *switched*
-        samples (NaN where no sample switched)."""
-        n_t, n_v, _, _ = self.grid.shape
+        samples (NaN where no sample switched).  One masked
+        ``np.nanpercentile`` over the whole (T, V, S) tensor — never-crossed
+        samples become NaN and drop out per (T, V) cell."""
         horizon = self.grid.n_steps * self.grid.dt
-        out = np.full((n_t, n_v, len(qs)), np.nan)
-        for t in range(n_t):
-            for v in range(n_v):
-                ct = self.crossing_time[t, v]
-                ok = ct < horizon
-                if ok.any():
-                    out[t, v] = np.percentile(ct[ok], qs)
-        return out
+        ct = np.where(self.crossing_time < horizon, self.crossing_time,
+                      np.nan)
+        with warnings.catch_warnings():
+            # (T, V) cells where nothing switched are *expected* to be NaN
+            warnings.filterwarnings("ignore", "All-NaN slice encountered")
+            out = np.nanpercentile(ct, np.asarray(qs, dtype=float), axis=-1)
+        return np.moveaxis(out, 0, -1)
 
     def pulse_for_wer(self, wer_target: float, t_index: int = 0,
                       v_index: Optional[int] = None) -> float:
@@ -216,6 +275,16 @@ class CampaignResult:
         return float(pulses[ok[0]])
 
 
+def _launch_spans(n_slices: int, slice_cells: int,
+                  max_cells: Optional[int]) -> List[Tuple[int, int]]:
+    """Group whole temperature slices into launches of <= max_cells lanes
+    (one launch when ``max_cells`` is None)."""
+    if max_cells is None:
+        return [(0, n_slices)]
+    per = max(1, int(max_cells) // slice_cells)
+    return [(a, min(a + per, n_slices)) for a in range(0, n_slices, per)]
+
+
 def run_campaign(
     p: DeviceParams,
     grid: CampaignGrid,
@@ -224,13 +293,22 @@ def run_campaign(
     use_cache: bool = True,
     cache_dir: Optional[str] = None,
     devices: Optional[int] = None,
+    chunk: int = EARLY_EXIT_CHUNK,
+    max_cells_per_launch: Optional[int] = None,
 ) -> CampaignResult:
     """Run (or cache-load) a full Monte-Carlo campaign.
 
-    One thermal-kernel launch per temperature slice; voltage and sample ride
-    the packed cells axis, pulse width is post-processing.  ``backend`` is
-    "pallas" (production) or "ref" (pure-jnp oracle — same noise streams,
-    used for parity checks and throughput baselines).
+    The whole (temperature x voltage x sample) grid rides the packed cells
+    plane of **one** kernel launch (per-lane sigma carries the temperature
+    axis); pulse width is post-processing.  ``backend`` is "pallas"
+    (production) or "ref" (pure-jnp oracle — same noise streams, used for
+    parity checks and throughput baselines).
+
+    ``chunk`` sets the early-exit granularity (0 disables early exit and
+    step quantization — the exact fixed-horizon launch).  Campaigns larger
+    than ``max_cells_per_launch`` lanes split along temperature-slice
+    boundaries into multiple launches, all dispatched before the first
+    device sync, so transfers overlap integration.
     """
     assert backend in ("pallas", "ref"), backend
     key = _cache.campaign_key(p, grid, backend)
@@ -240,25 +318,39 @@ def run_campaign(
                 len(grid.temperatures), len(grid.voltages), grid.n_samples):
             return CampaignResult(grid=grid, backend=backend,
                                   crossing_time=hit, elapsed_s=0.0,
-                                  from_cache=True)
+                                  from_cache=True, n_launches=0)
 
     n_t, n_v, _, n_s = grid.shape
-    crossing = np.empty((n_t, n_v, n_s))
-    elapsed = 0.0
     n_steps = grid.n_steps
-    for ti, temp in enumerate(grid.temperatures):
-        p_t = dataclasses.replace(p, temperature=float(temp))
-        state, seeds = pack_plane(grid, p_t, ti)
-        sigma = brown_sigma(p_t, grid.dt)
-        n_dev = _usable_devices(state.shape[1], devices)
-        t0 = time.time()
-        out = _integrate_sharded(
-            state, seeds, p=p_t, dt=grid.dt, n_steps=n_steps,
-            sigma=float(sigma), switch_threshold=float(grid.switch_threshold),
-            backend=backend, n_dev=n_dev)
-        out = np.asarray(jax.block_until_ready(out))
-        elapsed += time.time() - t0
-        crossing[ti] = out[7, :grid.cells].reshape(n_v, n_s) * grid.dt
+    n_static = _quantize_steps(n_steps) if chunk > 0 else n_steps
+    state, seeds, sigma, budget, spans = pack_campaign(grid, p)
+    slice_cells = state.shape[1] // n_t
+    launches = _launch_spans(n_t, slice_cells, max_cells_per_launch)
+
+    # dispatch every launch before syncing on any of them: jax dispatch is
+    # async, so device compute and D2H transfers pipeline across launches
+    t0 = time.time()
+    outs = []
+    for a, b in launches:
+        c0, c1 = a * slice_cells, b * slice_cells
+        outs.append(_integrate_sharded(
+            state[:, c0:c1], seeds[c0:c1], sigma[c0:c1], budget[c0:c1],
+            p=p, dt=grid.dt, n_steps=n_static,
+            switch_threshold=float(grid.switch_threshold), backend=backend,
+            n_dev=_usable_devices(c1 - c0, devices), chunk=int(chunk)))
+    rows = [np.asarray(jax.block_until_ready(o))[7] for o in outs]
+    elapsed = time.time() - t0
+
+    # clip the quantized-horizon sentinel (n_static) back to the grid's
+    # horizon: real crossings are <= budget == n_steps and pass unchanged.
+    # float64 before the dt multiply — in f32 the sentinel n_steps*dt
+    # rounds below the f64 horizon and never-crossed lanes would leak into
+    # the switched-only latency reductions
+    row7 = np.minimum(np.concatenate(rows).astype(np.float64),
+                      float(n_steps))
+    crossing = np.empty((n_t, n_v, n_s))
+    for ti, (lo, hi) in enumerate(spans):
+        crossing[ti] = row7[lo:hi].reshape(n_v, n_s) * grid.dt
 
     if use_cache:
         _cache.store(key, crossing,
@@ -267,4 +359,4 @@ def run_campaign(
                              "backend": backend},
                      cache_dir=cache_dir)
     return CampaignResult(grid=grid, backend=backend, crossing_time=crossing,
-                          elapsed_s=elapsed)
+                          elapsed_s=elapsed, n_launches=len(launches))

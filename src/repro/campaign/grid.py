@@ -4,14 +4,24 @@ A *campaign* is the Monte-Carlo experiment the paper's reliability story
 needs: sweep write voltage, pulse width and temperature, run many thermal
 samples per point, and reduce to WER / latency-percentile surfaces.
 
-Key packing insight: pulse width does **not** need its own simulation axis.
-The kernel records the *first-crossing step* per cell, so one integration to
-``max(pulse)/dt`` steps yields WER at every shorter pulse by thresholding
-the crossing time — the pulse axis is pure post-processing.  Temperature
-changes Brown's sigma (a compile-time kernel scalar), so it stays a
-host-level loop (few values).  What is packed into the kernel's ``(8,
-cells)`` SoA layout is the (voltage x sample) plane: ``cells = n_V * n_S``
-lanes, each an independent thermal stream (per-lane counter-RNG seed).
+Key packing insights (DESIGN.md §8):
+
+* Pulse width does **not** need its own simulation axis.  The kernel
+  records the *first-crossing step* per cell, so one integration to
+  ``max(pulse)/dt`` steps yields WER at every shorter pulse by
+  thresholding the crossing time — the pulse axis is pure post-processing.
+* Temperature does **not** need its own launch axis either.  Brown's sigma
+  is a per-lane kernel input (aux plane row 0), so the whole
+  (temperature x voltage x sample) grid packs into the cells plane:
+  ``cells = n_T * n_V * n_S`` lanes, each an independent thermal stream
+  (per-lane counter-RNG seed), one launch, one compile
+  (``pack_campaign``).
+* Lane counts are padded to **shape buckets** — power-of-two multiples of
+  ``CELL_TILE`` (``bucket_cells``) — so ragged workloads (write-verify
+  retry rounds over a shrinking cell set) re-land on a handful of compiled
+  shapes instead of one XLA compile per round.  Padded lanes carry a step
+  budget of 0 (aux plane row 1): they are frozen before the first step and
+  the early-exit loop skips them entirely.
 """
 from __future__ import annotations
 
@@ -76,6 +86,28 @@ class CampaignGrid:
                 len(self.pulse_widths), self.n_samples)
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= ``n`` — the shared rounding rule behind
+    both lane bucketing (``bucket_cells``) and the engine's compiled-horizon
+    quantization (``engine._quantize_steps``); tune them together."""
+    assert n > 0, n
+    return 1 << (n - 1).bit_length()
+
+
+def bucket_cells(cells: int) -> int:
+    """Smallest power-of-two multiple of ``CELL_TILE`` >= ``cells``.
+
+    The campaign engine pads every launch to a bucket so ragged cell counts
+    (write-verify retry rounds, arbitrary ensembles) reuse a logarithmic
+    number of compiled shapes.  Bucket-pad lanes ride with a step budget of
+    0, so the extra lanes are frozen at step 0 and (being SIMD lanes of
+    otherwise-occupied tiles, or whole tiles that exit before their first
+    chunk) cost essentially nothing.
+    """
+    assert cells > 0, cells
+    return CELL_TILE * next_pow2(-(-cells // CELL_TILE))
+
+
 def pack_soa(m0: jnp.ndarray, voltages: jnp.ndarray) -> jnp.ndarray:
     """(cells, n_sub, 3) states + (cells,) drives -> padded ``(8, cells)`` SoA.
 
@@ -84,13 +116,19 @@ def pack_soa(m0: jnp.ndarray, voltages: jnp.ndarray) -> jnp.ndarray:
     0-2 for m and zero rows 3-5 — the engine routes those tiles through the
     ``kernels.ref.ref_llg_rk4`` scan path, never the Pallas kernel, but the
     campaign semantics (padding, seeds, first-crossing row 7) are
-    identical.
+    identical.  Lane padding goes to the ``bucket_cells`` shape bucket, not
+    just the next ``CELL_TILE`` multiple — see the module docstring.
     """
-    if m0.shape[1] == 2:
-        return pack_states(m0, jnp.asarray(voltages, jnp.float32))
-    assert m0.shape[1] == 1, m0.shape
     cells = m0.shape[0]
-    pad = (-cells) % CELL_TILE
+    target = bucket_cells(cells)
+    if m0.shape[1] == 2:
+        state = pack_states(m0, jnp.asarray(voltages, jnp.float32))
+        extra = target - state.shape[1]
+        if extra:
+            state = jnp.pad(state, ((0, 0), (0, extra)))
+        return state
+    assert m0.shape[1] == 1, m0.shape
+    pad = target - cells
     m0 = jnp.pad(m0, ((0, pad), (0, 0), (0, 0)))
     v = jnp.pad(jnp.asarray(voltages, jnp.float32), (0, pad))
     z = jnp.zeros_like(v)
@@ -121,10 +159,54 @@ def pack_plane(grid: CampaignGrid, p: DeviceParams, t_index: int):
     m0 = jax.vmap(lambda t, f: llg.initial_state(p, t, f))(th, ph)
     v = jnp.repeat(jnp.asarray(grid.voltages, jnp.float32), n_s)
 
-    state = pack_soa(m0, v)                         # pads to CELL_TILE
+    state = pack_soa(m0, v)                         # pads to bucket_cells
     padded = state.shape[1]
     # distinct stream block per temperature slice: offset the base seed so
-    # T=0 and T=1 lanes never share counters
-    base = (grid.seed * 0x9E3779B1 + t_index * 0x85EB_CA6B) & 0xFFFFFFFF
-    seeds = noise.cell_seeds(base, padded)
+    # T=0 and T=1 lanes never share counters (kernels.noise.slice_seeds)
+    seeds = noise.slice_seeds(grid.seed, t_index, padded)
     return state, seeds
+
+
+def pack_campaign(grid: CampaignGrid, p: DeviceParams):
+    """Fuse the temperature axis into the cells plane: one SoA block for the
+    whole (T x V x S) grid.
+
+    Each temperature slice is packed exactly as ``pack_plane`` would pack it
+    standalone — same initial-state draws, same per-lane counter-RNG
+    streams, same bucket padding — and the padded slices are concatenated
+    along the cells axis.  A fused launch therefore produces *bit-identical*
+    crossing rows to the old one-launch-per-temperature loop (pinned by
+    ``tests/test_fused_engine.py``); what changes is that Brown's sigma
+    becomes a per-lane row (slice ``ti`` carries ``thermal_sigma(p @ T_ti,
+    dt)``) and the padded lanes carry a step budget of 0.
+
+    Returns ``(state, seeds, sigma, budget, spans)``: the ``(8, cells)``
+    SoA block, per-lane uint32 streams, per-lane sigma row [T], per-lane
+    step-budget row (``grid.n_steps`` on real lanes, 0 on padding), and
+    ``spans[ti] = (start, stop)`` — the real-lane slice of temperature
+    ``ti`` in the packed plane.
+    """
+    from repro.core.montecarlo import thermal_sigma
+
+    n_steps = float(grid.n_steps)
+    states, seed_rows, sigma_rows, budget_rows, spans = [], [], [], [], []
+    offset = 0
+    for ti, temp in enumerate(grid.temperatures):
+        p_t = (p if temp == p.temperature
+               else dataclasses.replace(p, temperature=float(temp)))
+        st, sd = pack_plane(grid, p_t, ti)
+        padded = st.shape[1]
+        lane = jnp.arange(padded)
+        states.append(st)
+        seed_rows.append(sd)
+        sigma_rows.append(jnp.full((padded,), thermal_sigma(p_t, grid.dt),
+                                   jnp.float32))
+        budget_rows.append(
+            jnp.where(lane < grid.cells, n_steps, 0.0).astype(jnp.float32))
+        spans.append((offset, offset + grid.cells))
+        offset += padded
+    return (jnp.concatenate(states, axis=1),
+            jnp.concatenate(seed_rows),
+            jnp.concatenate(sigma_rows),
+            jnp.concatenate(budget_rows),
+            spans)

@@ -44,6 +44,7 @@ def wer_margined_pulse(
     seed: int = 0,
     use_cache: bool = True,
     ladder: Optional[Tuple[float, ...]] = None,
+    temperatures: Optional[Tuple[float, ...]] = None,
 ) -> float:
     """Smallest ladder pulse [s] with WER <= ``wer_target`` at ``v_write``.
 
@@ -56,6 +57,14 @@ def wer_margined_pulse(
     Resolution of the WER estimate is 1/n_samples, so ask for more samples
     when targeting rates below ~1e-2.  Raises ValueError when no ladder
     rung meets the target.
+
+    ``temperatures`` margins the pulse over an *operating range* (the
+    variation-resilient drivers of the companion Choudhary & Adegbija
+    paper schedule against corner temperatures, not just nominal): the
+    whole (T x pulse-ladder) grid rides one fused engine launch
+    (temperature is a per-lane kernel input, DESIGN.md §8) and the
+    returned pulse is the smallest rung meeting the WER target at *every*
+    temperature.  Default: the device's nominal temperature only.
     """
     # lazy: keep `import repro.imc` free of the campaign/kernels stack
     # (closed-form consumers never pay for Pallas at package-import time)
@@ -64,9 +73,12 @@ def wer_margined_pulse(
 
     p = _params_for(kind)
     pulses = ladder or _LADDERS[kind]
+    temps = (tuple(float(t) for t in temperatures) if temperatures
+             else (p.temperature,))
 
     grid = CampaignGrid(voltages=(float(v_write),), pulse_widths=pulses,
-                        temperatures=(p.temperature,), n_samples=n_samples,
+                        temperatures=temps, n_samples=n_samples,
                         dt=DEVICE_DT[kind], seed=seed)
     res = run_campaign(p, grid, use_cache=use_cache)
-    return res.pulse_for_wer(wer_target, t_index=0, v_index=0)
+    return max(res.pulse_for_wer(wer_target, t_index=ti, v_index=0)
+               for ti in range(len(temps)))

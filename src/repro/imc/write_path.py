@@ -41,6 +41,18 @@ Modeling conventions (documented, not hidden):
   pipelined controller the verify sense overlaps the next attempt's line
   charge (paper Sec. III-B).  Both are explicit policy knobs for
   non-pipelined accounting.
+
+Performance note (DESIGN.md §8): retry rounds are recompile-free.  The
+engine pads each round's shrinking cell set to a power-of-two shape bucket
+(``campaign.bucket_cells`` — extra lanes carry a zero step budget and cost
+nothing), the per-round seed and Brown sigma are traced kernel inputs, and
+the pulse horizon rides the per-lane step-budget row under a
+power-of-two-quantized compiled horizon — so a ``max_attempts``-round
+schedule compiles O(log cells) times, not once per round, and a
+``write_surface`` sweep over (temperature x voltage x pulse) reuses those
+same compiles across its whole grid.  ``ArrayWriteResult.rounds`` records
+the rounds actually run; ``benchmarks/run.py --only write`` reports rounds
+vs XLA compiles.
 """
 from __future__ import annotations
 
@@ -120,6 +132,7 @@ class ArrayWriteResult:
                                   # attempt; NaN where the cell never wrote
     energy: np.ndarray            # (cells,) total write energy [J]
     elapsed_s: float              # simulation wall-clock
+    rounds: int = 0               # retry rounds actually integrated
 
     @property
     def cycle(self) -> float:
@@ -206,9 +219,11 @@ def write_verify(kind: str, n_cells: int,
     remaining = np.arange(n_cells)
 
     t0 = time.time()
+    rounds = 0
     for rnd in range(policy.max_attempts):
         if remaining.size == 0:
             break
+        rounds += 1
         grid = CampaignGrid(
             voltages=(v,), pulse_widths=(pulse,), temperatures=(temp,),
             n_samples=int(remaining.size), dt=dt,
@@ -234,7 +249,7 @@ def write_verify(kind: str, n_cells: int,
     return ArrayWriteResult(kind=kind, policy=policy, pulse=pulse, dt=dt,
                             attempts=attempts, success=success,
                             crossing_time=crossing, energy=energy,
-                            elapsed_s=elapsed)
+                            elapsed_s=elapsed, rounds=rounds)
 
 
 def program_bits(target: np.ndarray, kind: str = "afmtj",

@@ -8,20 +8,31 @@ cell of a subarray (and every Monte-Carlo sample) — restructured for TPU:
   Lane dimension = cells (multiples of 128), so every vector op in the RK4
   update is a full-width VPU op.
 * One grid step owns a ``(8, CELL_TILE)`` VMEM-resident tile and advances it
-  ``n_steps`` with an inner ``fori_loop`` — HBM traffic is O(cells), compute
-  O(cells * steps): arithmetic intensity ~ 60 flops/step/cell keeps the tile
-  compute-bound for any realistic step count.
+  up to ``n_steps`` — HBM traffic is O(cells), compute O(cells * steps):
+  arithmetic intensity ~ 60 flops/step/cell keeps the tile compute-bound
+  for any realistic step count.
 * Device constants (gamma, alpha, B_E, B_k, RK4 dt, transport constants for
   the self-consistent a_J(theta) drive) are closed over as compile-time
-  scalars — they are fixed per simulation campaign.
-* Optional thermal field (``thermal_sigma > 0``): Brown's Langevin term,
-  sampled per step per sublattice component from the stateless counter-based
-  generator in ``kernels/noise.py``.  Each lane carries its own uint32
-  stream seed (second input row-vector), so every cell of a packed campaign
-  tile is an independent thermal sample — this is what lets the campaign
-  engine run a whole (voltage x sample) Monte-Carlo grid in one launch.
+  scalars — they are fixed per device kind.
+* Thermal field (``seeds`` given): Brown's Langevin term, sampled per step
+  per sublattice component from the stateless counter-based generator in
+  ``kernels/noise.py``.  Each lane carries its own uint32 stream seed and
+  its own **per-lane sigma** (second input plane, row 0) — temperature is
+  campaign *data*, not a compile-time scalar, so a whole
+  (temperature x voltage x sample) grid rides one launch with one compile.
+* Per-lane **step budget** (second input plane, row 1): lane ``i``
+  integrates only while ``step < budget[i]`` — past its budget a lane is
+  frozen (state held, no crossings recorded).  Padded lanes get budget 0
+  and cost nothing; campaigns whose true horizon is shorter than the
+  compiled ``n_steps`` (shape-bucketed launches) stop at the budget.
+* Chunked early exit (``chunk > 0``): the step loop is a ``while_loop``
+  over chunks of ``chunk`` steps; after each chunk the tile exits as soon
+  as every lane is done (crossed or out of budget).  Crossing-step results
+  are bit-identical to the fixed-horizon path (the per-step update order
+  is unchanged — early exit only skips steps no lane needed), which
+  ``tests/test_fused_engine.py`` pins against the ref oracle.
 
-Hardware adaptation note (DESIGN.md §2): this replaces the scalar SPICE
+Hardware adaptation note (DESIGN.md §2, §8): this replaces the scalar SPICE
 inner loop; the physics is bit-identical to ``repro.core`` (ref.py is the
 pure-jnp oracle and tests sweep shapes/dtypes against it, including the
 thermal stream at a fixed seed).
@@ -39,6 +50,7 @@ from repro.kernels import noise
 
 CELL_TILE = 512
 ROWS = 8
+AUX_ROWS = 2     # aux plane: row 0 = per-lane sigma [T], row 1 = step budget
 
 
 def _rhs(m1, m2, aj, p: DeviceParams, bth1=None, bth2=None):
@@ -94,9 +106,13 @@ def _aj_from_v(v, nz, p: DeviceParams):
 
 
 def _make_body(p: DeviceParams, dt: float, n_steps: int,
-               switch_threshold: float, sigma: float, seeds, v):
-    """Build the fori_loop body; ``seeds`` is None for the deterministic
-    path (keeps the compiled graph identical to the pre-thermal kernel)."""
+               switch_threshold: float, sigma, seeds, v, budget=None):
+    """Build the per-step body; ``seeds`` is None for the deterministic
+    path (keeps the compiled graph identical to the pre-thermal kernel).
+    ``sigma`` is a scalar or per-lane row; ``budget`` (per-lane step
+    budget, f32) masks updates for lanes past their horizon — with
+    ``budget == n_steps`` everywhere the masked graph computes the exact
+    same values as the unmasked one."""
 
     def body(i, carry):
         m1, m2, crossed = carry
@@ -135,7 +151,12 @@ def _make_body(p: DeviceParams, dt: float, n_steps: int,
         m2n = _renorm(m2n)
         nz_new = 0.5 * (m1n[2] - m2n[2])
         newly = (nz_new < -switch_threshold) & (crossed >= float(n_steps))
-        crossed = jnp.where(newly, jnp.float32(i + 1), crossed)
+        if budget is not None:
+            active = jnp.asarray(i, jnp.float32) < budget
+            newly = newly & active
+            m1n = tuple(jnp.where(active, a, b) for a, b in zip(m1n, m1))
+            m2n = tuple(jnp.where(active, a, b) for a, b in zip(m2n, m2))
+        crossed = jnp.where(newly, jnp.asarray(i + 1, jnp.float32), crossed)
         return m1n, m2n, crossed
 
     return body
@@ -155,18 +176,46 @@ def _llg_kernel(state_ref, out_ref, *, p: DeviceParams, dt: float,
     out_ref[...] = out
 
 
-def _llg_thermal_kernel(state_ref, seeds_ref, out_ref, *, p: DeviceParams,
-                        dt: float, n_steps: int, switch_threshold: float,
-                        sigma: float):
+def _llg_thermal_kernel(state_ref, seeds_ref, aux_ref, out_ref, *,
+                        p: DeviceParams, dt: float, n_steps: int,
+                        switch_threshold: float, chunk: int):
+    """Thermal kernel: per-lane sigma (aux row 0), per-lane step budget
+    (aux row 1), optional chunked early exit (``chunk > 0``)."""
     s = state_ref[...]
     m1 = (s[0], s[1], s[2])
     m2 = (s[3], s[4], s[5])
     v = s[6]
     seeds = seeds_ref[0]
+    sigma = aux_ref[0]
+    budget = aux_ref[1]
     crossed = jnp.full_like(v, float(n_steps))
 
-    body = _make_body(p, dt, n_steps, switch_threshold, sigma, seeds, v)
-    m1, m2, crossed = jax.lax.fori_loop(0, n_steps, body, (m1, m2, crossed))
+    body = _make_body(p, dt, n_steps, switch_threshold, sigma, seeds, v,
+                      budget=budget)
+    if chunk <= 0:
+        m1, m2, crossed = jax.lax.fori_loop(0, n_steps, body,
+                                            (m1, m2, crossed))
+    else:
+        n_chunks = -(-n_steps // chunk)
+
+        def cond(carry):
+            c, m1, m2, crossed = carry
+            done = (crossed < float(n_steps)) | (
+                jnp.asarray(c * chunk, jnp.float32) >= budget)
+            return (c < n_chunks) & ~jnp.all(done)
+
+        def chunk_body(carry):
+            c, m1, m2, crossed = carry
+
+            def inner(j, cc):
+                return body(c * chunk + j, cc)
+
+            m1, m2, crossed = jax.lax.fori_loop(0, chunk, inner,
+                                                (m1, m2, crossed))
+            return c + 1, m1, m2, crossed
+
+        _, m1, m2, crossed = jax.lax.while_loop(
+            cond, chunk_body, (0, m1, m2, crossed))
     out = jnp.stack([m1[0], m1[1], m1[2], m2[0], m2[1], m2[2], v, crossed])
     out_ref[...] = out
 
@@ -178,40 +227,55 @@ def llg_rk4_pallas(
     n_steps: int,
     switch_threshold: float = 0.9,
     interpret: bool = False,
-    thermal_sigma: float = 0.0,
+    thermal_sigma=0.0,            # scalar or (cells,) f32 per-lane Brown sigma
     seeds: jnp.ndarray | None = None,   # (cells,) or (1, cells) uint32
+    step_budget=None,             # optional (cells,) f32 per-lane step budget
+    chunk: int = 0,               # >0: early-exit chunk size (steps)
 ) -> jnp.ndarray:
     rows, cells = state.shape
     assert rows == ROWS and cells % CELL_TILE == 0, state.shape
 
-    if thermal_sigma > 0.0:
-        assert seeds is not None, "thermal path needs per-cell stream seeds"
-        seeds = seeds.reshape(1, cells).astype(jnp.uint32)
+    if seeds is None:
+        # deterministic path: no noise inputs, fixed horizon — the compiled
+        # graph is identical to the pre-thermal kernel
+        assert isinstance(thermal_sigma, (int, float)) and thermal_sigma == 0.0, \
+            "thermal path needs per-cell stream seeds"
+        assert step_budget is None, "step budgets ride the thermal kernel"
         kern = functools.partial(
-            _llg_thermal_kernel, p=p, dt=dt, n_steps=n_steps,
-            switch_threshold=switch_threshold, sigma=float(thermal_sigma),
+            _llg_kernel, p=p, dt=dt, n_steps=n_steps,
+            switch_threshold=switch_threshold,
         )
         return pl.pallas_call(
             kern,
             out_shape=jax.ShapeDtypeStruct((ROWS, cells), jnp.float32),
             grid=(cells // CELL_TILE,),
-            in_specs=[
-                pl.BlockSpec((ROWS, CELL_TILE), lambda i: (0, i)),
-                pl.BlockSpec((1, CELL_TILE), lambda i: (0, i)),
-            ],
+            in_specs=[pl.BlockSpec((ROWS, CELL_TILE), lambda i: (0, i))],
             out_specs=pl.BlockSpec((ROWS, CELL_TILE), lambda i: (0, i)),
             interpret=interpret,
-        )(state, seeds)
+        )(state)
 
+    seeds = seeds.reshape(1, cells).astype(jnp.uint32)
+    sigma = jnp.broadcast_to(
+        jnp.asarray(thermal_sigma, jnp.float32), (cells,))
+    if step_budget is None:
+        budget = jnp.full((cells,), float(n_steps), jnp.float32)
+    else:
+        budget = jnp.broadcast_to(
+            jnp.asarray(step_budget, jnp.float32), (cells,))
+    aux = jnp.stack([sigma, budget])                     # (AUX_ROWS, cells)
     kern = functools.partial(
-        _llg_kernel, p=p, dt=dt, n_steps=n_steps,
-        switch_threshold=switch_threshold,
+        _llg_thermal_kernel, p=p, dt=dt, n_steps=n_steps,
+        switch_threshold=switch_threshold, chunk=int(chunk),
     )
     return pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct((ROWS, cells), jnp.float32),
         grid=(cells // CELL_TILE,),
-        in_specs=[pl.BlockSpec((ROWS, CELL_TILE), lambda i: (0, i))],
+        in_specs=[
+            pl.BlockSpec((ROWS, CELL_TILE), lambda i: (0, i)),
+            pl.BlockSpec((1, CELL_TILE), lambda i: (0, i)),
+            pl.BlockSpec((AUX_ROWS, CELL_TILE), lambda i: (0, i)),
+        ],
         out_specs=pl.BlockSpec((ROWS, CELL_TILE), lambda i: (0, i)),
         interpret=interpret,
-    )(state)
+    )(state, seeds, aux)

@@ -55,6 +55,22 @@ def cell_seeds(base_seed: int, cells: int) -> jnp.ndarray:
     return mix32(mix32(np.uint32(base_seed & 0xFFFFFFFF) + idx * _GOLD))
 
 
+_SLICE_GOLD = 0x9E3779B1        # odd Weyl constants: campaign seed ...
+_SLICE_OFF = 0x85EB_CA6B        # ... and per-temperature-slice offset
+
+
+def slice_seeds(base_seed: int, slice_index: int, cells: int) -> jnp.ndarray:
+    """(cells,) uint32 streams for slice ``slice_index`` of a campaign.
+
+    Offsets the base seed by a per-slice Weyl constant before the per-lane
+    split, so (for the campaign engine) the temperature slices of a fused
+    (T x V x S) plane never share counters — and a fused launch consumes
+    exactly the streams the old per-temperature launches did (the packing
+    bit-compat ``tests/test_fused_engine.py`` pins)."""
+    base = (base_seed * _SLICE_GOLD + slice_index * _SLICE_OFF) & 0xFFFFFFFF
+    return cell_seeds(base, cells)
+
+
 def _uniform24(h: jnp.ndarray) -> jnp.ndarray:
     """uint32 hash -> f32 uniform in (0, 1] using the top 24 bits."""
     return ((h >> np.uint32(8)).astype(jnp.float32) + 1.0) * _INV_2_24

@@ -31,15 +31,21 @@ def llg_rk4(state, p: DeviceParams, dt: float, n_steps: int,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "p", "dt", "n_steps", "switch_threshold", "thermal_sigma"))
+    "p", "dt", "n_steps", "switch_threshold", "chunk"))
 def llg_rk4_thermal(state, seeds, p: DeviceParams, dt: float, n_steps: int,
-                    thermal_sigma: float, switch_threshold: float = 0.9):
+                    thermal_sigma, switch_threshold: float = 0.9,
+                    step_budget=None, chunk: int = 0):
     """Thermal (Langevin) variant: per-cell counter-RNG streams in ``seeds``
-    ((cells,) uint32, see kernels/noise.cell_seeds).  Brown's sigma is a
-    compile-time scalar — fixed per (device, temperature, dt) campaign."""
+    ((cells,) uint32, see kernels/noise.cell_seeds).  Brown's sigma is
+    *traced data* — a scalar or a (cells,) per-lane row — so campaigns
+    spanning several temperatures (or write-verify retry rounds at any
+    seed) share one compile.  ``step_budget`` (traced, per-lane) caps each
+    lane's horizon below the compiled ``n_steps``; ``chunk > 0`` (static)
+    turns on chunked early exit — see kernels/llg_rk4.py."""
     return llg_rk4_pallas(state, p, dt, n_steps, switch_threshold,
                           interpret=_default_interpret(),
-                          thermal_sigma=thermal_sigma, seeds=seeds)
+                          thermal_sigma=thermal_sigma, seeds=seeds,
+                          step_budget=step_budget, chunk=chunk)
 
 
 def pack_states(m0: jnp.ndarray, voltages: jnp.ndarray) -> jnp.ndarray:

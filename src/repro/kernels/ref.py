@@ -21,14 +21,22 @@ def ref_llg_rk4(
     dt: float,
     n_steps: int,
     switch_threshold: float = 0.9,
-    thermal_sigma: float = 0.0,
+    thermal_sigma=0.0,            # scalar or (cells,) per-lane Brown sigma
     seeds: jnp.ndarray | None = None,   # (cells,) uint32 per-lane streams
+    step_budget=None,             # optional (cells,) f32 per-lane step budget
+    chunk: int = 0,               # >0: early-exit chunk size (steps)
 ) -> jnp.ndarray:
     """Both device families: ``p.n_sublattices`` picks dual-sublattice
     (AFMTJ — the Pallas kernel's allclose target) or single-sublattice
     (FM/MTJ — the campaign engine's production tile; rows 3:6 stay zero
     and only the first thermal triple of each per-lane counter is drawn,
-    so padded lanes and RNG streams behave identically across kinds)."""
+    so padded lanes and RNG streams behave identically across kinds).
+
+    Mirrors the kernel's campaign contract (same chunked early exit, same
+    per-lane sigma/budget semantics): a lane past ``step_budget`` is frozen
+    and records no crossings; with ``chunk > 0`` the whole block exits as
+    soon as every lane is done.  Crossing rows are bit-identical to the
+    fixed-horizon path either way."""
     cells = state.shape[1]
     n_sub = p.n_sublattices
     if n_sub == 1:
@@ -38,31 +46,72 @@ def ref_llg_rk4(
             [state[0:3].T, state[3:6].T], axis=1
         )                          # (cells, 2, 3)
     v = state[6]
-    if thermal_sigma > 0.0:
-        assert seeds is not None, "thermal path needs per-cell stream seeds"
+    use_noise = seeds is not None
+    if use_noise:
         seeds = seeds.reshape(cells).astype(jnp.uint32)
+        sigma = jnp.broadcast_to(
+            jnp.asarray(thermal_sigma, jnp.float32), (cells,)
+        ).reshape(cells, 1, 1)
+    else:
+        assert isinstance(thermal_sigma, (int, float)) and thermal_sigma == 0.0, \
+            "thermal path needs per-cell stream seeds"
+    budget = None
+    if step_budget is not None or chunk > 0:
+        budget = (jnp.full((cells,), float(n_steps), jnp.float32)
+                  if step_budget is None else
+                  jnp.broadcast_to(jnp.asarray(step_budget, jnp.float32),
+                                   (cells,)))
 
-    def body(carry, i):
-        m, crossed = carry
+    def step(i, m, crossed):
         nz = llg.order_parameter_z(m)
         g = tmr.conductance_from_cos(nz, p)
         aj = p.stt_prefactor * v * g / p.area
-        if thermal_sigma > 0.0:
+        if use_noise:
             # identical stream to the Pallas kernel: (cells, n_sub, 3) field
             # from the same per-lane counters (see kernels/noise.py)
             d1, d2 = noise.thermal_draws(seeds, i)
             triples = [jnp.stack(d1, axis=-1), jnp.stack(d2, axis=-1)]
-            b_th = thermal_sigma * jnp.stack(triples[:n_sub], axis=1)
+            b_th = sigma * jnp.stack(triples[:n_sub], axis=1)
         else:
             b_th = None
         m_next = rk4_step(lambda mm, tt: llg.llg_rhs(mm, p, aj, b_th), m, 0.0, dt)
         nz_new = llg.order_parameter_z(m_next)
         newly = (nz_new < -switch_threshold) & (crossed >= float(n_steps))
-        crossed = jnp.where(newly, (i + 1).astype(jnp.float32), crossed)
-        return (m_next, crossed), None
+        if budget is not None:
+            active = jnp.asarray(i, jnp.float32) < budget
+            newly = newly & active
+            m_next = jnp.where(active[:, None, None], m_next, m)
+        crossed = jnp.where(newly, jnp.asarray(i + 1, jnp.float32), crossed)
+        return m_next, crossed
 
     crossed0 = jnp.full((cells,), float(n_steps), jnp.float32)
-    (m, crossed), _ = jax.lax.scan(body, (m, crossed0), jnp.arange(n_steps))
+    if chunk <= 0:
+        def body(carry, i):
+            m, crossed = carry
+            return step(i, m, crossed), None
+
+        (m, crossed), _ = jax.lax.scan(body, (m, crossed0),
+                                       jnp.arange(n_steps))
+    else:
+        n_chunks = -(-n_steps // chunk)
+
+        def cond(carry):
+            c, m, crossed = carry
+            done = (crossed < float(n_steps)) | (
+                jnp.asarray(c * chunk, jnp.float32) >= budget)
+            return (c < n_chunks) & ~jnp.all(done)
+
+        def chunk_body(carry):
+            c, m, crossed = carry
+
+            def inner(j, mc):
+                return step(c * chunk + j, *mc)
+
+            m, crossed = jax.lax.fori_loop(0, chunk, inner, (m, crossed))
+            return c + 1, m, crossed
+
+        _, m, crossed = jax.lax.while_loop(cond, chunk_body,
+                                           (0, m, crossed0))
     sub2 = m[:, 1, :].T if n_sub == 2 else jnp.zeros_like(m[:, 0, :].T)
     return jnp.concatenate(
         [m[:, 0, :].T, sub2, v[None], crossed[None]], axis=0
