@@ -17,10 +17,14 @@ modeled-vs-paper comparison where the paper reports numbers.
                (measured latency/energy/retry distributions, paper 8x/9x
                write ratios from transient dynamics — DESIGN.md §7), plus
                the retry-rounds-vs-XLA-compiles pin (§8)
+  variation  — process-corner variation campaign (DESIGN.md §9): the
+               (corner x T x V x S) grid as ONE launch / ONE compile,
+               corner values rerun compile-free, per-corner WER/latency
+               rows, corner-margined write pulse
 
 ``--smoke`` shrinks shapes and skips steady-state warmups so CI can exercise
-kernel-vs-reference parity on every push (honored by ``mvm``, ``wer`` and
-``write``).
+kernel-vs-reference parity on every push (honored by ``mvm``, ``wer``,
+``write`` and ``variation``).
 
 ``--json PATH`` additionally writes every emitted row to a machine-readable
 BENCH.json: ``{name, value, units, wall_us, cold_us}`` per row plus run
@@ -510,6 +514,106 @@ def bench_write():
              f"{r0.write_attempts:.2f}")
 
 
+def bench_variation():
+    """Process-corner variation campaign (DESIGN.md §9): the whole
+    (corner x T x V x S) reliability grid — per-lane alpha/B_k/g_scale
+    rows on the kernel's variation plane — rides ONE launch with ONE
+    compile, corner values/sigmas/seeds rerun compile-free, and the
+    margined write pulse widens to cover the worst (corner, T) cell.
+    Smoke mode shortens the pulse ladder but keeps the full
+    3 corners x 3 T x 3 V x 256 samples plane so CI pins the one-launch
+    corner axis on every push."""
+    import dataclasses
+
+    from repro.campaign import CampaignGrid, run_campaign
+    from repro.campaign.engine import _integrate_sharded
+    from repro.core.params import (AFMTJ_PARAMS, CORNER_FF, CORNER_SS,
+                                   CORNER_TT, VariationSpec)
+    from repro.imc.write_margin import wer_margined_pulse
+
+    corners = (CORNER_FF, CORNER_TT,
+               dataclasses.replace(CORNER_SS, sigma_alpha=0.05, sigma_r=0.05))
+    spec = VariationSpec(corners=corners)
+    temps = (260.0, 300.0, 340.0)
+    voltages = (0.8, 1.0, 1.2)
+    n_samples = 256
+    pulses = tuple(x * 1e-12 for x in
+                   ((150, 250) if SMOKE else (100, 150, 200, 250, 300, 350)))
+    grid = CampaignGrid(voltages=voltages, pulse_widths=pulses,
+                        temperatures=temps, n_samples=n_samples,
+                        dt=0.1e-12, seed=0, variation=spec)
+    print(f"# variation: fused (C x T x V x S) campaign {len(corners)}C x "
+          f"{len(temps)}T x {len(voltages)}V x {n_samples}S, "
+          f"{len(pulses)} pulses, {grid.n_steps} steps "
+          f"({'smoke' if SMOKE else 'full'})")
+    print("name,us_per_call,derived")
+
+    _integrate_sharded._clear_cache()
+    if SMOKE:    # one timed call — the compile pins are what CI is after
+        res, us = _t(lambda: run_campaign(AFMTJ_PARAMS, grid,
+                                          use_cache=False))
+        us_cold = None
+    else:
+        res, us, us_cold = _t_split(
+            lambda: run_campaign(AFMTJ_PARAMS, grid, use_cache=False))
+    compiles = _integrate_sharded._cache_size()
+    n = res.n_samples_total
+    emit("variation.corners", 0, len(corners))
+    emit("variation.launches", 0, res.n_launches)
+    emit("variation.xla_compiles", 0, compiles)
+    emit("variation_one_launch_ok", 0,
+         int(res.n_launches == 1 and compiles == 1))
+    emit("variation.us_per_sample", us / n, n, "us/sample",
+         cold_us=None if us_cold is None else us_cold / n)
+
+    # corner VALUES are data: different factors, D2D sigmas and seed reuse
+    # the compile (the CI grep on this is the §9 regression tripwire)
+    spec_b = VariationSpec(corners=(
+        dataclasses.replace(CORNER_SS, alpha_factor=1.25, sigma_r=0.1),
+        CORNER_TT, CORNER_FF), seed=11)
+    _, us_b = _t(lambda: run_campaign(
+        AFMTJ_PARAMS, dataclasses.replace(grid, variation=spec_b, seed=4),
+        use_cache=False))
+    emit("variation.corner_values_rerun_compiles", us_b,
+         _integrate_sharded._cache_size())
+    emit("variation_corner_values_data_ok", 0,
+         int(_integrate_sharded._cache_size() == compiles))
+
+    # per-corner WER / switched-latency rows at 1.0 V, worst temperature,
+    # on the ~250 ps rung (the nominal WER<=1e-2 margin pulse) — the rung
+    # where the corners actually separate
+    wer = res.wer_surface()                       # (C, T, V, P)
+    lat = res.latency_percentiles((50.0, 99.0))   # (C, T, V, 2)
+    vi = 1
+    pi = min(range(len(pulses)), key=lambda i: abs(pulses[i] - 250e-12))
+    for ci, c in enumerate(corners):
+        wr = wer[ci, :, vi, pi].max()
+        emit(f"variation.{c.name}.wer@1.0V.{pulses[pi]*1e12:.0f}ps", 0,
+             f"{wr:.3f}")
+        p50 = np.nanmax(lat[ci, :, vi, 0])
+        emit(f"variation.{c.name}.latency_p50_ps@1.0V", 0,
+             f"{p50*1e12:.0f}", "ps")
+    # the slow corner must actually be the reliability binder
+    emit("variation_corner_ordering_ok", 0,
+         int(wer[2, :, vi, pi].max() >= wer[0, :, vi, pi].max()))
+
+    if SMOKE:
+        return
+    # corner-margined write pulse: worst (corner, T) cell, one fused launch
+    kw = dict(v_write=1.0, wer_target=1e-2, n_samples=128, use_cache=False)
+    p_nom = wer_margined_pulse("afmtj", **kw)
+    p_cor = wer_margined_pulse("afmtj", temperatures=temps,
+                               variation=VariationSpec(
+                                   corners=(CORNER_FF, CORNER_TT,
+                                            CORNER_SS)), **kw)
+    emit("variation.margin_pulse_ps@1V.nominal", 0, f"{p_nom*1e12:.0f}", "ps")
+    emit("variation.margin_pulse_ps@1V.corners", 0, f"{p_cor*1e12:.0f}", "ps")
+    emit("variation_margin_covers_corners_ok", 0, int(p_cor >= p_nom))
+    print(f"# WER<=1e-2 pulse: nominal {p_nom*1e12:.0f} ps -> worst "
+          f"(corner, T) {p_cor*1e12:.0f} ps (the margin the companion "
+          "paper's variation-resilient drivers schedule)")
+
+
 BENCHES = {
     "table1": bench_table1,
     "fig3": bench_fig3,
@@ -520,6 +624,7 @@ BENCHES = {
     "mvm": bench_mvm,
     "wer": bench_wer,
     "write": bench_write,
+    "variation": bench_variation,
 }
 
 

@@ -12,6 +12,7 @@ cannot see.  The 1-bit XNOR row is the *bnn*-mode floor for comparison.
     PYTHONPATH=src python examples/analog_accuracy.py
 """
 from repro.configs.registry import ARCHS
+from repro.core.params import VariationSpec
 from repro.imc.analog_pipeline import AnalogConfig
 from repro.imc.mapping import (accuracy_surface, decode_projection_accuracy,
                                decode_projection_shapes)
@@ -19,13 +20,15 @@ from repro.imc.mapping import (accuracy_surface, decode_projection_accuracy,
 SWEEP_ARCHS = ("gemma2-2b", "qwen3-8b", "mamba2-780m")
 ADC_BITS = (4, 6, 8)
 TMRS = (0.8, 5.0)       # validated ~80% and the theoretical-limit regime
-G_SIGMA = 0.05          # 5% lognormal device-to-device variation
+G_SIGMA = 0.05          # 5% lognormal D2D junction-resistance variation,
+                        # as a VariationSpec (DESIGN.md §9)
+VARIATION = VariationSpec.from_g_sigma(G_SIGMA)
 CAPS = dict(cap_k=384, cap_n=256, batch=8)
 
 
 def main():
     print("=== Analog MVM accuracy vs ADC bits x TMR "
-          f"(g_sigma={G_SIGMA}, IR drop on) ===\n")
+          f"(D2D sigma_r={G_SIGMA}, IR drop on) ===\n")
     for name in SWEEP_ARCHS:
         cfg = ARCHS[name]
         k, n = decode_projection_shapes(cfg, CAPS["cap_k"], CAPS["cap_n"])
@@ -33,7 +36,7 @@ def main():
         print(f"  {'adc_bits':>8} {'tmr':>5} {'mse':>10} {'nmse':>10} "
               f"{'cosine':>8}")
         surf = accuracy_surface(cfg, kind="afmtj", adc_bits=ADC_BITS,
-                                tmrs=TMRS, g_sigma=G_SIGMA, **CAPS)
+                                tmrs=TMRS, variation=VARIATION, **CAPS)
         for (bits, tmr), r in sorted(surf.items()):
             print(f"  {bits:8d} {tmr:5.1f} {r.mse:10.2e} {r.nmse:10.2e} "
                   f"{r.cosine:8.5f}")

@@ -1,0 +1,107 @@
+"""Process-variation study: WER and margined write pulse vs D2D sigma,
+AFMTJ vs MTJ (DESIGN.md §9).
+
+Reproduces the qualitative result of the companion driver-co-design paper
+(Choudhary & Adegbija, "Device-Circuit Co-Design of Variation-Resilient
+Read and Write Drivers for AFMTJ Memories"): device-to-device variation —
+not the nominal device — sizes the write pulse a controller must
+schedule.  Each D2D sigma level rides as its own process "corner" of one
+``VariationSpec``, so the whole (sigma x T x pulse-ladder) scenario space
+for a device kind is **one fused campaign launch** (corners are per-lane
+kernel data); the reported margin is taken at the worst (T, corner) cell.
+
+Run:  PYTHONPATH=src python examples/variation_study.py [--quick]
+"""
+import argparse
+import dataclasses
+
+from repro.campaign import CampaignGrid, run_campaign
+from repro.core.params import (AFMTJ_PARAMS, CORNER_SS, MTJ_PARAMS,
+                               VariationSpec)
+
+TEMPS = (300.0, 340.0)
+WER_TARGET = 5e-2
+# per-kind pulse ladders bracketing the thermal tail, dense enough that
+# the sigma-driven margin growth resolves to a rung (MTJ reversal ~10x
+# slower; coarser step keeps its horizon tractable on CPU interpret mode)
+LADDERS = {
+    "afmtj": (tuple(x * 1e-12 for x in
+                    (200, 225, 250, 275, 300, 350, 400, 500)), 0.1e-12),
+    "mtj": (tuple(x * 1e-12 for x in
+                  (1800, 2000, 2200, 2500, 2800, 3200, 3600)), 0.2e-12),
+}
+
+
+def corner_sweep(sigmas):
+    """One 'corner' per D2D sigma level, all centered on the slow (ss)
+    process corner — the cell the drivers must actually cover."""
+    return tuple(
+        dataclasses.replace(CORNER_SS, name=f"ss/d2d={s:g}", sigma_alpha=s,
+                            sigma_b_aniso=s, sigma_volume=s, sigma_r=s)
+        for s in sigmas)
+
+
+def study(kind, params, sigmas, n_samples):
+    pulses, dt = LADDERS[kind]
+    spec = VariationSpec(corners=corner_sweep(sigmas))
+    grid = CampaignGrid(voltages=(1.0,), pulse_widths=pulses,
+                        temperatures=TEMPS, n_samples=n_samples, dt=dt,
+                        seed=0, variation=spec)
+    res = run_campaign(params, grid)
+    wer = res.wer_surface()                        # (n_sigma, n_T, 1, n_P)
+    print(f"\n{kind}: {len(sigmas)} sigma levels x {len(TEMPS)} T x "
+          f"{n_samples} samples, {len(pulses)}-rung ladder -> "
+          f"{res.n_launches} launch(es), {res.elapsed_s:.1f}s"
+          f"{' (cache)' if res.from_cache else ''}")
+    print(f"  {'D2D sigma':>10} {'WER@' + format(pulses[0]*1e12, '.0f') + 'ps':>12} "
+          f"{'margined pulse':>15}")
+    out = {}
+    for ci, s in enumerate(sigmas):
+        worst_wer = wer[ci, :, 0, 0].max()         # shortest rung, worst T
+        try:
+            pulse = max(res.pulse_for_wer(WER_TARGET, t_index=ti,
+                                          corner_index=ci)
+                        for ti in range(len(TEMPS)))
+            ptxt = f"{pulse*1e12:9.0f} ps"
+        except ValueError:
+            pulse = float("nan")
+            ptxt = "  > ladder"
+        out[s] = pulse
+        print(f"  {s:>10g} {worst_wer:>12.3f} {ptxt:>15}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer samples / sigma levels (fast sanity run)")
+    args = ap.parse_args()
+    sigmas = (0.0, 0.2) if args.quick else (0.0, 0.1, 0.2)
+    n_samples = 32 if args.quick else 64
+
+    print("WER-margined write pulse vs device-to-device sigma at the slow "
+          f"process corner (worst T in {TEMPS} K, WER <= {WER_TARGET:g})")
+    margins = {}
+    for kind, params in (("afmtj", AFMTJ_PARAMS), ("mtj", MTJ_PARAMS)):
+        margins[kind] = study(kind, params, sigmas, n_samples)
+
+    base = {k: margins[k][sigmas[0]] for k in margins}
+    print("\nmargin cost of D2D spread (vs the same device at sigma=0):")
+    for s in sigmas[1:]:
+        row = []
+        for k in ("afmtj", "mtj"):
+            d = (margins[k][s] - base[k]) * 1e12
+            g = margins[k][s] / base[k]
+            row.append(f"{k} +{d:.0f} ps ({g:.2f}x)" if g == g
+                       else f"{k} n/a")
+        print(f"  sigma={s:g}: " + "   ".join(row))
+    print("\nBoth devices widen their pulse with D2D spread, but the "
+          "AFMTJ's ps-scale exchange-enhanced reversal pays tens of "
+          "picoseconds of variation margin where the MTJ pays hundreds — "
+          "the nominal ~8x write-latency advantage survives at the worst "
+          "(T, corner) cell, which is the headroom the companion paper's "
+          "variation-resilient drivers exploit (DESIGN.md §9).")
+
+
+if __name__ == "__main__":
+    main()

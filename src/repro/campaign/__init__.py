@@ -1,13 +1,14 @@
-"""Thermal Monte-Carlo campaign engine (DESIGN.md §5, §8).
+"""Thermal Monte-Carlo campaign engine (DESIGN.md §5, §8, §9).
 
-Packs (temperature x voltage x pulse x sample) reliability grids into the
-Pallas thermal LLG kernel's ``(8, cells)`` SoA layout — temperature rides
-the lanes as a per-lane Brown sigma, so a whole campaign is one launch
-with one compile — shards cell tiles across devices, and reduces
-first-crossing steps into WER / latency surfaces with on-disk result
-caching.
+Packs (corner x temperature x voltage x pulse x sample) reliability grids
+into the Pallas thermal LLG kernel's ``(8, cells)`` SoA layout —
+temperature rides the lanes as a per-lane Brown sigma and process corners
+as per-lane device-parameter rows (``CampaignGrid.variation``), so a
+whole campaign is one launch with one compile — shards cell tiles across
+devices, and reduces first-crossing steps into WER / latency surfaces
+with on-disk result caching.
 
-  grid    — CampaignGrid axes + SoA packing (fused-T plane, shape buckets)
+  grid    — CampaignGrid axes + SoA packing (fused-CT plane, shape buckets)
   engine  — run_campaign / run_ensemble + surface reductions + early exit
   cache   — content-addressed npz result cache
 """
@@ -26,4 +27,5 @@ from repro.campaign.grid import (  # noqa: F401
     pack_campaign,
     pack_plane,
     pack_soa,
+    pack_variation,
 )

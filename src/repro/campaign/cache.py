@@ -33,10 +33,18 @@ from repro.core.params import DeviceParams
 # update order are unchanged — tests/test_fused_engine.py pins the fused
 # vs per-T equality), but the launch layout changed enough that a
 # conservative invalidation is cheaper than any risk of a stale surface.
-KERNEL_VERSION = 3
+# v4: per-lane device-variation plane (DESIGN.md §9) — grids grew an
+# optional ``variation`` axis (``CampaignGrid.variation`` lands in the
+# key payload via asdict) and variation results store a 4-D
+# (corner x T x V x S) tensor.  Nominal grids are numerically unchanged,
+# but v3 entries were keyed without the variation field, so they are
+# orphaned rather than risked: a v3 file simply never matches a v4 key
+# (the version is in the hash) and loads of malformed/stale files stay
+# misses — tests/test_variation.py pins the ignored-not-crashed behavior.
+KERNEL_VERSION = 4
 # covered by the key so future packing changes (lane order, bucket rule)
 # can invalidate independently of the physics version
-CELLS_LAYOUT = "fused-T/bucket-pow2"
+CELLS_LAYOUT = "fused-CT/bucket-pow2"
 
 DEFAULT_CACHE_DIR = os.environ.get(
     "REPRO_CAMPAIGN_CACHE", os.path.join(os.path.expanduser("~"),

@@ -10,7 +10,11 @@ post-processing into the kernel's cells plane:
 * temperature rides the lanes too: Brown's sigma is a per-lane kernel
   input (aux plane), so a (T x V x S) grid is **one launch, one compile**
   instead of a host-level loop with one sigma-specialized recompile per
-  temperature (``grid.pack_campaign``).
+  temperature (``grid.pack_campaign``);
+* process corners ride the lanes as well (DESIGN.md §9): per-lane
+  alpha / B_k / conductance-factor rows on the kernel's variation plane
+  make a (corner x T x V x S) grid one launch too, with corner count and
+  values as pure data (``grid.pack_variation``).
 
 No wasted steps either: the kernel integrates in chunks and exits a tile
 as soon as every lane has crossed or exhausted its per-lane step budget
@@ -46,7 +50,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.campaign import cache as _cache
 from repro.campaign.grid import (CampaignGrid, next_pow2, pack_campaign,
-                                 pack_soa)
+                                 pack_soa, pack_variation)
 from repro.core.montecarlo import thermal_sigma
 from repro.core.params import DeviceParams
 from repro.kernels import noise, ref
@@ -83,20 +87,24 @@ def _quantize_steps(n_steps: int) -> int:
 
 @functools.partial(jax.jit, static_argnames=(
     "p", "dt", "n_steps", "switch_threshold", "backend", "n_dev", "chunk"))
-def _integrate_sharded(state, seeds, sigma, budget, *, p: DeviceParams,
-                       dt: float, n_steps: int, switch_threshold: float,
-                       backend: str, n_dev: int, chunk: int):
+def _integrate_sharded(state, seeds, sigma, budget, lane_params=None, *,
+                       p: DeviceParams, dt: float, n_steps: int,
+                       switch_threshold: float, backend: str, n_dev: int,
+                       chunk: int):
     """Advance a (8, cells) block on ``n_dev`` devices (cells sharded).
 
     Everything that varies *within* a campaign — or between retry rounds
     of a write-verify schedule — is traced data: per-lane Brown sigma,
-    per-lane step budgets, per-lane RNG stream seeds, initial states and
-    drive voltages.  The only compile keys left are the device physics
-    ``p``, the step size, the (quantized) horizon, and the launch shape
-    (bucketed by ``grid.bucket_cells``).
+    per-lane step budgets, per-lane RNG stream seeds, initial states,
+    drive voltages, and (variation campaigns, DESIGN.md §9) the per-lane
+    device-parameter rows ``lane_params`` — so process-corner count and
+    values never recompile.  The only compile keys left are the nominal
+    device physics ``p``, the step size, the (quantized) horizon, the
+    launch shape (bucketed by ``grid.bucket_cells``), and whether the
+    variation plane is present at all.
     """
 
-    def tile_fn(st, sd, sg, bd):
+    def tile_fn(st, sd, sg, bd, lp=None):
         # the SoA Pallas kernel is dual-sublattice by construction
         # (staggered Neel STT); single-sublattice FM/MTJ devices integrate
         # the same production physics through the oracle's lane-vectorized
@@ -104,22 +112,26 @@ def _integrate_sharded(state, seeds, sigma, budget, *, p: DeviceParams,
         if p.n_sublattices == 1 or backend == "ref":
             return ref.ref_llg_rk4(st, p, dt, n_steps, switch_threshold,
                                    thermal_sigma=sg, seeds=sd,
-                                   step_budget=bd, chunk=chunk)
+                                   step_budget=bd, chunk=chunk,
+                                   lane_params=lp)
         return llg_rk4_pallas(st, p, dt, n_steps, switch_threshold,
                               interpret=_default_interpret(),
                               thermal_sigma=sg, seeds=sd,
-                              step_budget=bd, chunk=chunk)
+                              step_budget=bd, chunk=chunk, lane_params=lp)
 
     if n_dev == 1:
-        return tile_fn(state, seeds, sigma, budget)
+        return tile_fn(state, seeds, sigma, budget, lane_params)
     mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("cells",))
     # check_rep=False: shard_map has no replication rule for pallas_call;
     # every output is fully sharded along cells anyway
-    fn = shard_map(tile_fn, mesh=mesh,
-                   in_specs=(P(None, "cells"), P("cells"), P("cells"),
-                             P("cells")),
+    specs = (P(None, "cells"), P("cells"), P("cells"), P("cells"))
+    if lane_params is None:
+        fn = shard_map(tile_fn, mesh=mesh, in_specs=specs,
+                       out_specs=P(None, "cells"), check_rep=False)
+        return fn(state, seeds, sigma, budget)
+    fn = shard_map(tile_fn, mesh=mesh, in_specs=specs + (P(None, "cells"),),
                    out_specs=P(None, "cells"), check_rep=False)
-    return fn(state, seeds, sigma, budget)
+    return fn(state, seeds, sigma, budget, lane_params)
 
 
 def _usable_devices(cells_padded: int, devices: Optional[int]) -> int:
@@ -163,6 +175,8 @@ def run_ensemble(
     switch_threshold: float = 0.9,
     devices: Optional[int] = None,
     chunk: int = 0,
+    lane_params=None,                # optional (3, cells) variation rows
+    sigma_lanes=None,                # optional (cells,) per-lane Brown sigma
 ) -> EnsembleResult:
     """Integrate an arbitrary thermal ensemble through the kernel path.
 
@@ -179,7 +193,16 @@ def run_ensemble(
     ``chunk > 0`` turns on chunked early exit: crossing rows are
     bit-identical to the fixed-horizon default, but ``final_state`` then
     holds the at-exit state (lanes stop within one chunk of the last
-    crossing) rather than the state after the full horizon.
+    crossing) rather than the state after the full horizon — and the
+    *compiled* horizon is quantized to a power of two (the per-lane budget
+    row stops real lanes at the true ``n_steps``), so callers sweeping
+    horizons (write-verify retry rounds) share compiles.
+
+    ``lane_params`` ((3, cells): alpha, B_k, g_scale) switches on the
+    kernel's per-lane device-variation plane; ``sigma_lanes`` overrides
+    the scalar Brown sigma with a per-lane row (the two usually travel
+    together — a varied alpha/volume changes sigma; see
+    ``VariationSpec.lane_rows``).
 
     Never-switched lanes report ``crossing_steps == n_steps`` (so
     ``crossing_time == n_steps*dt``); when thresholding crossings against a
@@ -189,18 +212,30 @@ def run_ensemble(
     cells = m0.shape[0]
     state = pack_soa(m0, jnp.asarray(voltages, jnp.float32))
     padded = state.shape[1]
-    sigma_t = brown_sigma(p, dt, temperature)
-    sigma = jnp.full((padded,), float(sigma_t), jnp.float32)
+    if sigma_lanes is not None:
+        sigma = jnp.pad(jnp.asarray(sigma_lanes, jnp.float32),
+                        (0, padded - cells))
+    else:
+        sigma_t = brown_sigma(p, dt, temperature)
+        sigma = jnp.full((padded,), float(sigma_t), jnp.float32)
     budget = jnp.where(jnp.arange(padded) < cells, float(n_steps),
                        0.0).astype(jnp.float32)
+    if lane_params is not None:
+        lp = np.asarray(lane_params, np.float64)
+        assert lp.shape == (3, cells), (lp.shape, cells)
+        fill = np.array([[p.alpha], [p.b_aniso], [1.0]])
+        lane_params = jnp.asarray(np.concatenate(
+            [lp, np.broadcast_to(fill, (3, padded - cells))],
+            axis=1).astype(np.float32))
     seeds = noise.cell_seeds(seed, padded)
     n_dev = _usable_devices(padded, devices)
+    n_static = _quantize_steps(n_steps) if chunk > 0 else n_steps
 
     t0 = time.time()
     out = _integrate_sharded(
-        state, seeds, sigma, budget, p=p, dt=dt, n_steps=n_steps,
-        switch_threshold=float(switch_threshold), backend=backend,
-        n_dev=n_dev, chunk=int(chunk))
+        state, seeds, sigma, budget, lane_params, p=p, dt=dt,
+        n_steps=n_static, switch_threshold=float(switch_threshold),
+        backend=backend, n_dev=n_dev, chunk=int(chunk))
     out = np.asarray(jax.block_until_ready(out))
     elapsed = time.time() - t0
     return EnsembleResult(
@@ -212,38 +247,50 @@ def run_ensemble(
 
 @dataclasses.dataclass(frozen=True)
 class CampaignResult:
-    """WER / latency surfaces over the (T, V, pulse) axes of a grid."""
+    """WER / latency surfaces over the (T, V, pulse) axes of a grid — with
+    a leading process-corner axis when the grid carries a
+    ``VariationSpec`` (``crossing_time`` is then (n_C, n_T, n_V, n_S) and
+    every surface reduction grows the same leading axis)."""
     grid: CampaignGrid
     backend: str
-    crossing_time: np.ndarray        # (n_T, n_V, n_S) seconds
+    crossing_time: np.ndarray        # (n_T, n_V, n_S) s; variation grids
+                                     # prepend the corner axis (n_C, ...)
     elapsed_s: float                 # integration wall-clock (0 on cache hit)
     from_cache: bool = False
     n_launches: int = 1              # kernel launches this result took
 
     @property
     def n_samples_total(self) -> int:
-        n_t, n_v, _, n_s = self.grid.shape
-        return n_t * n_v * n_s
+        return int(self.crossing_time.size)
+
+    @property
+    def corners(self) -> Optional[Tuple[str, ...]]:
+        """Corner names of the leading axis (None for nominal grids)."""
+        return (None if self.grid.variation is None
+                else self.grid.variation.corner_names)
 
     def wer_surface(self) -> np.ndarray:
-        """(n_T, n_V, n_P) write-error rate: fraction of thermal samples NOT
-        switched by the end of each pulse width."""
+        """(..., n_T, n_V, n_P) write-error rate: fraction of thermal
+        samples NOT switched by the end of each pulse width (leading axis =
+        process corners for variation grids)."""
         pulses = np.asarray(self.grid.pulse_widths)
         # crossing_time == n_steps*dt marks "never crossed" and exceeds
         # every pulse in the grid by construction
-        ct = self.crossing_time[:, :, None, :]            # (T, V, 1, S)
-        return (ct > pulses[None, None, :, None]).mean(axis=-1)
+        ct = self.crossing_time[..., None, :]             # (..., V, 1, S)
+        return (ct > pulses[:, None]).mean(axis=-1)
 
-    def wer(self, t_index: int = 0) -> np.ndarray:
-        """(n_V, n_P) slice at one temperature."""
-        return self.wer_surface()[t_index]
+    def wer(self, t_index: int = 0, corner_index: int = 0) -> np.ndarray:
+        """(n_V, n_P) slice at one temperature (and corner, if any)."""
+        w = self.wer_surface()
+        return w[corner_index, t_index] if w.ndim == 4 else w[t_index]
 
     def latency_percentiles(self, qs: Sequence[float] = (50.0, 99.0)
                             ) -> np.ndarray:
-        """(n_T, n_V, len(qs)) switching-latency percentiles over *switched*
-        samples (NaN where no sample switched).  One masked
-        ``np.nanpercentile`` over the whole (T, V, S) tensor — never-crossed
-        samples become NaN and drop out per (T, V) cell."""
+        """(..., n_T, n_V, len(qs)) switching-latency percentiles over
+        *switched* samples (NaN where no sample switched; leading corner
+        axis for variation grids).  One masked ``np.nanpercentile`` over
+        the whole tensor — never-crossed samples become NaN and drop out
+        per (T, V) cell."""
         horizon = self.grid.n_steps * self.grid.dt
         ct = np.where(self.crossing_time < horizon, self.crossing_time,
                       np.nan)
@@ -254,17 +301,25 @@ class CampaignResult:
         return np.moveaxis(out, 0, -1)
 
     def pulse_for_wer(self, wer_target: float, t_index: int = 0,
-                      v_index: Optional[int] = None) -> float:
+                      v_index: Optional[int] = None,
+                      corner_index: Optional[int] = None) -> float:
         """Smallest grid pulse width whose WER <= target (the write-margin
         query the IMC controller binds against).  ``v_index=None`` (default)
         evaluates at the *lowest* grid voltage — the worst-case drive, so a
         controller pulse sized from the default covers every cell — not at
-        whatever voltage happens to be listed last.  Raises if no grid
-        pulse qualifies — callers must widen the grid rather than silently
-        build timing models on a pulse that misses the WER target."""
+        whatever voltage happens to be listed last.  On a variation grid,
+        ``corner_index=None`` (default) takes the worst corner at every
+        pulse — the margined pulse then covers the whole process spread.
+        Raises if no grid pulse qualifies — callers must widen the grid
+        rather than silently build timing models on a pulse that misses
+        the WER target."""
         if v_index is None:
             v_index = int(np.argmin(self.grid.voltages))
-        w = self.wer(t_index)[v_index]
+        surface = self.wer_surface()
+        if surface.ndim == 4:
+            surface = (surface.max(axis=0) if corner_index is None
+                       else surface[corner_index])
+        w = surface[t_index][v_index]
         pulses = np.asarray(self.grid.pulse_widths)
         ok = np.nonzero(w <= wer_target)[0]
         if not ok.size:
@@ -306,26 +361,61 @@ def run_campaign(
 
     ``chunk`` sets the early-exit granularity (0 disables early exit and
     step quantization — the exact fixed-horizon launch).  Campaigns larger
-    than ``max_cells_per_launch`` lanes split along temperature-slice
-    boundaries into multiple launches, all dispatched before the first
-    device sync, so transfers overlap integration.
+    than ``max_cells_per_launch`` lanes split along (corner x temperature)
+    slice boundaries into multiple launches, all dispatched before the
+    first device sync, so transfers overlap integration.
+
+    With ``grid.variation`` set, the process-corner axis fuses into the
+    cells plane too (DESIGN.md §9): per-lane device-parameter rows ride
+    the kernel's variation plane, the whole (corner x T x V x S) grid is
+    still one launch, and the returned ``crossing_time`` grows a leading
+    corner axis.  Single-launch variation campaigns additionally pad the
+    *total* plane to a power-of-two bucket, so the corner count enters
+    the compile key only through that logarithmic bucket.
     """
     assert backend in ("pallas", "ref"), backend
+    spec = grid.variation
+    n_t, n_v, _, n_s = grid.shape
+    n_c = grid.n_corners
+    expect_shape = ((n_c, n_t, n_v, n_s) if spec is not None
+                    else (n_t, n_v, n_s))
     key = _cache.campaign_key(p, grid, backend)
     if use_cache:
         hit = _cache.load(key, cache_dir)
-        if hit is not None and hit.shape == (
-                len(grid.temperatures), len(grid.voltages), grid.n_samples):
+        if hit is not None and hit.shape == expect_shape:
             return CampaignResult(grid=grid, backend=backend,
                                   crossing_time=hit, elapsed_s=0.0,
                                   from_cache=True, n_launches=0)
 
-    n_t, n_v, _, n_s = grid.shape
     n_steps = grid.n_steps
     n_static = _quantize_steps(n_steps) if chunk > 0 else n_steps
-    state, seeds, sigma, budget, spans = pack_campaign(grid, p)
-    slice_cells = state.shape[1] // n_t
-    launches = _launch_spans(n_t, slice_cells, max_cells_per_launch)
+    if spec is None:
+        state, seeds, sigma, budget, spans = pack_campaign(grid, p)
+        lane_params = None
+    else:
+        state, seeds, sigma, budget, lane_params, spans = pack_variation(
+            grid, p)
+    n_slices = n_c * n_t
+    slice_cells = state.shape[1] // n_slices
+    launches = _launch_spans(n_slices, slice_cells, max_cells_per_launch)
+    if spec is not None and len(launches) == 1:
+        # total-plane pow2 bucket: corner count reaches the compile key
+        # only through this logarithmic bucket (3 vs 4 corners usually
+        # share a compiled shape; pinned by tests/test_variation.py)
+        from repro.campaign.grid import bucket_cells
+        total = state.shape[1]
+        pad = bucket_cells(total) - total
+        if pad:
+            state = jnp.pad(state, ((0, 0), (0, pad)))
+            seeds = jnp.pad(seeds, (0, pad))
+            sigma = jnp.pad(sigma, (0, pad))
+            budget = jnp.pad(budget, (0, pad))
+            fill = np.broadcast_to(
+                np.array([[p.alpha], [p.b_aniso], [1.0]], np.float32),
+                (3, pad))
+            lane_params = jnp.concatenate(
+                [lane_params, jnp.asarray(fill)], axis=1)
+        launches = [(0, n_slices)]
 
     # dispatch every launch before syncing on any of them: jax dispatch is
     # async, so device compute and D2H transfers pipeline across launches
@@ -333,8 +423,11 @@ def run_campaign(
     outs = []
     for a, b in launches:
         c0, c1 = a * slice_cells, b * slice_cells
+        if spec is not None and len(launches) == 1:
+            c1 = state.shape[1]              # include the total-bucket pad
         outs.append(_integrate_sharded(
             state[:, c0:c1], seeds[c0:c1], sigma[c0:c1], budget[c0:c1],
+            None if lane_params is None else lane_params[:, c0:c1],
             p=p, dt=grid.dt, n_steps=n_static,
             switch_threshold=float(grid.switch_threshold), backend=backend,
             n_dev=_usable_devices(c1 - c0, devices), chunk=int(chunk)))
@@ -348,9 +441,13 @@ def run_campaign(
     # the switched-only latency reductions
     row7 = np.minimum(np.concatenate(rows).astype(np.float64),
                       float(n_steps))
-    crossing = np.empty((n_t, n_v, n_s))
-    for ti, (lo, hi) in enumerate(spans):
-        crossing[ti] = row7[lo:hi].reshape(n_v, n_s) * grid.dt
+    crossing = np.empty(expect_shape)
+    for si, (lo, hi) in enumerate(spans):
+        plane = row7[lo:hi].reshape(n_v, n_s) * grid.dt
+        if spec is None:
+            crossing[si] = plane
+        else:
+            crossing[si // n_t, si % n_t] = plane
 
     if use_cache:
         _cache.store(key, crossing,

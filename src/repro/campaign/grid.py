@@ -16,6 +16,13 @@ Key packing insights (DESIGN.md §8):
   ``cells = n_T * n_V * n_S`` lanes, each an independent thermal stream
   (per-lane counter-RNG seed), one launch, one compile
   (``pack_campaign``).
+* Process corners don't either (DESIGN.md §9).  Per-lane device-parameter
+  rows (alpha, B_k, junction conductance factor — plus sigma/tilt derived
+  from the varied volume) ride the kernel's variation plane, so a
+  ``VariationSpec``'s corner axis packs corner-major ahead of the
+  temperature slices: ``cells = n_C * n_T * n_V * n_S``, still one launch
+  (``pack_variation``), corners sharing the nominal packing's thermal
+  streams and tilt draws (common random numbers).
 * Lane counts are padded to **shape buckets** — power-of-two multiples of
   ``CELL_TILE`` (``bucket_cells``) — so ragged workloads (write-verify
   retry rounds over a shrinking cell set) re-land on a handful of compiled
@@ -27,14 +34,15 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import llg
 from repro.core.device import thermal_theta0
-from repro.core.params import DeviceParams
+from repro.core.params import DeviceParams, VariationSpec
 from repro.kernels import noise
 from repro.kernels.llg_rk4 import CELL_TILE
 from repro.kernels.ops import pack_states
@@ -43,7 +51,15 @@ from repro.kernels.ops import pack_states
 @dataclasses.dataclass(frozen=True)
 class CampaignGrid:
     """Axes of one Monte-Carlo campaign (all hashable -> usable as jit
-    statics and as the on-disk cache key)."""
+    statics and as the on-disk cache key).
+
+    ``variation`` adds the process-corner axis (DESIGN.md §9): each corner
+    of the spec gets its own group of temperature slices in the packed
+    cells plane, with per-lane device-parameter rows carrying the corner
+    factors and D2D draws — corner count and values are campaign *data*
+    (they never enter a compile key), and the corner axis shares thermal
+    streams and tilt draws with the other corners (common random numbers,
+    so corner comparisons are paired per lane)."""
 
     voltages: Tuple[float, ...]
     pulse_widths: Tuple[float, ...]          # [s], post-processing axis
@@ -52,6 +68,7 @@ class CampaignGrid:
     dt: float = 0.1e-12
     seed: int = 0
     switch_threshold: float = 0.9
+    variation: Optional[VariationSpec] = None
 
     def __post_init__(self):
         object.__setattr__(self, "voltages", tuple(float(v) for v in self.voltages))
@@ -81,9 +98,14 @@ class CampaignGrid:
 
     @property
     def shape(self) -> Tuple[int, int, int, int]:
-        """(n_T, n_V, n_P, n_S) — the result surface axes."""
+        """(n_T, n_V, n_P, n_S) — the result surface axes (the optional
+        corner axis, ``n_corners``, prepends these for variation grids)."""
         return (len(self.temperatures), len(self.voltages),
                 len(self.pulse_widths), self.n_samples)
+
+    @property
+    def n_corners(self) -> int:
+        return 1 if self.variation is None else self.variation.n_corners
 
 
 def next_pow2(n: int) -> int:
@@ -152,10 +174,8 @@ def pack_plane(grid: CampaignGrid, p: DeviceParams, t_index: int):
     """
     n_v, n_s = len(grid.voltages), grid.n_samples
     cells = n_v * n_s
-    key = jax.random.fold_in(jax.random.PRNGKey(grid.seed), t_index)
-    k_th, k_ph = jax.random.split(key)
-    th = jnp.abs(jax.random.normal(k_th, (cells,))) * thermal_theta0(p) + 0.01
-    ph = jax.random.uniform(k_ph, (cells,), maxval=2 * jnp.pi)
+    zs, ph = _plane_tilt_draws(grid, t_index, cells)
+    th = zs * thermal_theta0(p) + 0.01
     m0 = jax.vmap(lambda t, f: llg.initial_state(p, t, f))(th, ph)
     v = jnp.repeat(jnp.asarray(grid.voltages, jnp.float32), n_s)
 
@@ -165,6 +185,19 @@ def pack_plane(grid: CampaignGrid, p: DeviceParams, t_index: int):
     # T=0 and T=1 lanes never share counters (kernels.noise.slice_seeds)
     seeds = noise.slice_seeds(grid.seed, t_index, padded)
     return state, seeds
+
+
+def _plane_tilt_draws(grid: CampaignGrid, t_index: int, cells: int):
+    """The Boltzmann tilt normals and azimuths of one (V x S) plane —
+    shared by ``pack_plane`` and the variation packer, so a variation
+    campaign's slices reuse exactly the draws the nominal packing would
+    (the per-lane tilt then differs only through the corner's own
+    ``theta0``: common random numbers across corners)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(grid.seed), t_index)
+    k_th, k_ph = jax.random.split(key)
+    zs = jnp.abs(jax.random.normal(k_th, (cells,)))
+    ph = jax.random.uniform(k_ph, (cells,), maxval=2 * jnp.pi)
+    return zs, ph
 
 
 def pack_campaign(grid: CampaignGrid, p: DeviceParams):
@@ -209,4 +242,70 @@ def pack_campaign(grid: CampaignGrid, p: DeviceParams):
             jnp.concatenate(seed_rows),
             jnp.concatenate(sigma_rows),
             jnp.concatenate(budget_rows),
+            spans)
+
+
+def pack_variation(grid: CampaignGrid, p: DeviceParams):
+    """Fuse the process-corner axis into the cells plane alongside
+    temperature: one SoA block for the whole (corner x T x V x S) grid
+    (DESIGN.md §9).
+
+    Layout is corner-major: slice ``ci * n_T + ti`` holds corner ``ci`` at
+    temperature ``ti``, packed exactly as a single-corner campaign would
+    pack it — same tilt normals (``_plane_tilt_draws``), same thermal
+    streams (``noise.slice_seeds(seed, ti)``, *shared across corners*:
+    common random numbers make corner comparisons paired per lane and the
+    fused launch bit-identical to per-corner launches), and D2D parameter
+    draws from the spec's own counter streams (salted by temperature index,
+    not corner position — ``VariationSpec.lane_factors``).
+
+    Returns ``(state, seeds, sigma, budget, lane_params, spans)``: the
+    ``(8, cells)`` SoA block, per-lane uint32 streams, per-lane Brown sigma
+    [T] (now a function of the varied alpha/volume), per-lane step budgets,
+    the ``(3, cells)`` variation rows (alpha, B_k, g_scale) the kernel's
+    aux plane carries, and ``spans[ci * n_T + ti] = (start, stop)`` real-
+    lane slices.  Bucket-pad lanes carry nominal parameter rows (never NaN
+    physics), sigma 0 and budget 0.
+    """
+    spec = grid.variation
+    assert spec is not None, "pack_variation needs grid.variation"
+    n_t = len(grid.temperatures)
+    n_steps = float(grid.n_steps)
+    cells = grid.cells
+    states, seed_rows, sigma_rows, budget_rows, lane_rows_, spans = (
+        [], [], [], [], [], [])
+    offset = 0
+    for corner in spec.corners:
+        for ti, temp in enumerate(grid.temperatures):
+            rows = spec.lane_rows(p, corner, cells, grid.dt,
+                                  temperature=temp, stream=ti)
+            zs, ph = _plane_tilt_draws(grid, ti, cells)
+            th = zs * jnp.asarray(rows.theta0, jnp.float32) + 0.01
+            m0 = jax.vmap(lambda t, f: llg.initial_state(p, t, f))(th, ph)
+            v = jnp.repeat(jnp.asarray(grid.voltages, jnp.float32),
+                           grid.n_samples)
+            st = pack_soa(m0, v)
+            padded = st.shape[1]
+            pad = padded - cells
+
+            def _row(vals, fill):
+                return np.pad(np.asarray(vals, np.float64), (0, pad),
+                              constant_values=fill).astype(np.float32)
+
+            states.append(st)
+            seed_rows.append(noise.slice_seeds(grid.seed, ti, padded))
+            sigma_rows.append(_row(rows.sigma, 0.0))
+            budget_rows.append(_row(np.full(cells, n_steps), 0.0))
+            lane_rows_.append(np.stack([
+                _row(rows.alpha, p.alpha),
+                _row(rows.b_aniso, p.b_aniso),
+                _row(rows.g_scale, 1.0),
+            ]))
+            spans.append((offset, offset + cells))
+            offset += padded
+    return (jnp.concatenate(states, axis=1),
+            jnp.concatenate(seed_rows),
+            jnp.asarray(np.concatenate(sigma_rows)),
+            jnp.asarray(np.concatenate(budget_rows)),
+            jnp.asarray(np.concatenate(lane_rows_, axis=1)),
             spans)

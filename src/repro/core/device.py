@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import llg, tmr
 from repro.core.integrator import BASE_DT, Trace, integrate_fixed
-from repro.core.params import DeviceParams
+from repro.core.params import DeviceParams, DeviceSample
 
 # Default thermal tilt of the initial state: theta_0 = sqrt(1/(2 Delta)),
 # the equilibrium Boltzmann spread for a macrospin with barrier Delta kT.
@@ -45,7 +45,6 @@ def a_j_from_voltage(v, m: jnp.ndarray, p: DeviceParams) -> jnp.ndarray:
     return p.stt_prefactor * j_density
 
 
-@partial(jax.jit, static_argnames=("n_steps", "down"))
 def simulate_write(
     p: DeviceParams,
     voltage,
@@ -57,12 +56,54 @@ def simulate_write(
     down: bool = True,
     thermal_sigma: float = 0.0,
     rng: Optional[jax.Array] = None,
+    variation: Optional[DeviceSample] = None,
 ) -> WriteResult:
     """Write (switch P -> AP, i.e. order parameter +z -> -z) at ``voltage``.
 
     The STT amplitude is evaluated self-consistently from the instantaneous
     conductance at every RK4 stage via the time-dependent drive hook below.
+
+    ``variation`` is one sampled device from a process-corner draw
+    (``core.params.VariationSpec.sample_device``): its corner/D2D-adjusted
+    ``DeviceParams`` replace ``p``, the junction conductance factor scales
+    the self-consistent drive, and the default Boltzmann tilt uses the
+    volume-adjusted thermal stability — exactly the semantics the campaign
+    engine's per-lane variation plane applies (DESIGN.md §9), so the
+    scalar baseline and the engine agree on what a corner means.  At the
+    nominal corner every factor is literally 1.0 and the result is
+    bit-identical to ``variation=None``.
     """
+    g_scale = 1.0
+    if variation is not None:
+        p = variation.params
+        g_scale = variation.g_scale
+        if theta0 is None:
+            theta0 = float(jnp.sqrt(1.0 / (2.0 * jnp.maximum(
+                variation.thermal_stability, 1.0))))
+    return _simulate_write(p, voltage, g_scale, n_steps=n_steps, dt=dt,
+                           theta0=theta0, t_rc=t_rc,
+                           pulse_margin=pulse_margin, down=down,
+                           thermal_sigma=thermal_sigma, rng=rng)
+
+
+# thermal_sigma is static: it gates the noise branch with python control
+# flow (the wrapper above always forwards it explicitly, so it would
+# otherwise be traced — unlike in the pre-variation signature where the
+# unpassed default stayed a concrete python float)
+@partial(jax.jit, static_argnames=("n_steps", "down", "thermal_sigma"))
+def _simulate_write(
+    p: DeviceParams,
+    voltage,
+    g_scale,
+    n_steps: int = 30000,
+    dt: float = BASE_DT,
+    theta0: Optional[float] = None,
+    t_rc: float = 40e-12,
+    pulse_margin: float = 1.02,
+    down: bool = True,
+    thermal_sigma: float = 0.0,
+    rng: Optional[jax.Array] = None,
+) -> WriteResult:
     th0 = thermal_theta0(p) if theta0 is None else theta0
     m0 = llg.initial_state(p, theta0=th0, phi0=0.3, up=down)
 
@@ -72,7 +113,7 @@ def simulate_write(
     # keep a_J state-dependent.
     def body(carry, key):
         m, t, t_sw, sw, en = carry
-        a_j = a_j_from_voltage(voltage, m, p)
+        a_j = a_j_from_voltage(voltage, m, p) * g_scale
         if thermal_sigma > 0.0:
             b_th = thermal_sigma * jax.random.normal(key, m.shape)
         else:
@@ -85,7 +126,7 @@ def simulate_write(
         newly = jnp.logical_and(crossed, jnp.logical_not(sw))
         t_sw = jnp.where(newly, t + dt, t_sw)
         sw = jnp.logical_or(sw, crossed)
-        g = tmr.conductance(m_next, p)
+        g = tmr.conductance(m_next, p) * g_scale
         en = en + jnp.where(sw, 0.0, jnp.asarray(voltage) ** 2 * g * dt)
         return (m_next, t + dt, t_sw, sw, en), None
 
@@ -103,12 +144,12 @@ def simulate_write(
 
     # Write pulse = switching time * margin; energy already integrated up to
     # switch, add the margin tail at the post-switch conductance.
-    g_final = tmr.conductance(m_f, p)
+    g_final = tmr.conductance(m_f, p) * g_scale
     tail = (pulse_margin - 1.0) * t_sw
     tail = jnp.where(jnp.isfinite(tail), tail, 0.0)
     # Energy over the full write window: RC/driver overhead at the initial
     # (parallel-state) conductance + the switching pulse + the margin tail.
-    g0 = tmr.conductance(m0, p)
+    g0 = tmr.conductance(m0, p) * g_scale
     energy = (
         en
         + jnp.asarray(voltage) ** 2 * g_final * tail

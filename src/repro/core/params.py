@@ -33,9 +33,10 @@ t_f=1.3 nm, P=0.6) per paper refs [5], [11].
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
+import numpy as np
 
 # --- physical constants (SI) -------------------------------------------------
 GAMMA = 1.760859630e11     # gyromagnetic ratio [rad / (s T)]
@@ -148,6 +149,261 @@ def _mtj_params() -> DeviceParams:
 
 AFMTJ_PARAMS: DeviceParams = _afmtj_params()
 MTJ_PARAMS: DeviceParams = _mtj_params()
+
+
+# --- process variation (DESIGN.md §9) ----------------------------------------
+#
+# The companion driver-co-design paper (Choudhary & Adegbija, "Device-Circuit
+# Co-Design of Variation-Resilient Read and Write Drivers for AFMTJ Memories")
+# sizes drivers, margins and WER targets against *process variation*, not the
+# nominal device.  A ``VariationSpec`` describes that scenario space: a tuple
+# of named process corners (systematic wafer-level shifts, multiplicative on
+# the Table II constants) plus per-corner device-to-device (D2D) sigmas for
+# the within-array lognormal/normal spread.  Every draw is a pure function of
+# (spec.seed, stream, parameter, lane) through the stateless counter-RNG in
+# ``kernels.noise`` — reproducible, hashable, and therefore usable as a jit
+# static and as part of the on-disk campaign cache key.
+
+# counter-RNG draw ids, one decorrelated stream per varied parameter
+_PID_ALPHA, _PID_B_ANISO, _PID_VOLUME, _PID_R = 0, 1, 2, 3
+# Weyl salts folding (seed, stream) into a 32-bit stream base
+_VAR_GOLD = 0x9E3779B1
+_VAR_STREAM = 0xC2B2AE35
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessCorner:
+    """One systematic process corner: multiplicative factors on the nominal
+    magnetics/transport constants, plus the D2D sigmas of the within-array
+    spread *around* that corner.
+
+    Factor conventions (all 1.0 / 0.0 = nominal):
+
+    * ``alpha_factor``   — Gilbert damping (raises the Neel-STT threshold
+      a_th ~ alpha·B_E and Brown's sigma).
+    * ``b_aniso_factor`` — uniaxial anisotropy B_k (barrier height: thermal
+      stability Delta and the Boltzmann tilt of the idle state).
+    * ``volume_factor``  — free-layer volume; drives Brown's sigma
+      (~ 1/sqrt(V)) and Delta (~ V) jointly, transport deliberately
+      untouched (barrier area variation is the ``r_factor``'s job).
+    * ``r_factor``       — RA/TMR resistance factor on the junction: scales
+      R_P and R_AP together, so the STT drive current (and a_J) scales by
+      ``1/r_factor``.
+
+    D2D sigmas are lognormal shape parameters (``VariationSpec.distribution
+    == "lognormal"``, the usual geometry/RA model) or relative normal sigmas.
+    The resistance draw is normalized to preserve the *mean conductance*
+    (E[1/r] = 1/r_factor — exact for the lognormal, to O(sigma^4) for the
+    normal) — the write-verify target the analog read path pre-compensates
+    to; the magnetics draws preserve the parameter mean.
+    """
+
+    name: str = "tt"
+    alpha_factor: float = 1.0
+    b_aniso_factor: float = 1.0
+    volume_factor: float = 1.0
+    r_factor: float = 1.0
+    sigma_alpha: float = 0.0
+    sigma_b_aniso: float = 0.0
+    sigma_volume: float = 0.0
+    sigma_r: float = 0.0
+
+    @property
+    def is_nominal(self) -> bool:
+        return (self.alpha_factor == self.b_aniso_factor ==
+                self.volume_factor == self.r_factor == 1.0 and
+                self.sigma_alpha == self.sigma_b_aniso ==
+                self.sigma_volume == self.sigma_r == 0.0)
+
+
+# Named corners: TT nominal; SS "slow" writes (damping + barrier + RA all
+# against the write driver); FF "fast" (the retention-risk corner).  The
+# ±10-15% spreads follow the MRAM compact-model corner convention the
+# companion paper's drivers are sized against.
+CORNER_TT = ProcessCorner("tt")
+CORNER_SS = ProcessCorner("ss", alpha_factor=1.15, b_aniso_factor=1.10,
+                          volume_factor=0.95, r_factor=1.15)
+CORNER_FF = ProcessCorner("ff", alpha_factor=0.87, b_aniso_factor=0.91,
+                          volume_factor=1.05, r_factor=0.87)
+PROCESS_CORNERS = {c.name: c for c in (CORNER_TT, CORNER_SS, CORNER_FF)}
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneRows:
+    """Per-lane device-parameter rows one (corner, stream) slice packs into
+    the kernel's variation plane (host-side numpy, float64)."""
+
+    alpha: np.ndarray       # (n,) Gilbert damping
+    b_aniso: np.ndarray     # (n,) anisotropy field B_k [T]
+    g_scale: np.ndarray     # (n,) junction conductance factor (= 1/r_factor)
+    volume: np.ndarray      # (n,) free-layer volume [m^3]
+    sigma: np.ndarray       # (n,) Brown thermal-field std per step [T]
+    theta0: np.ndarray      # (n,) Boltzmann tilt scale sqrt(1/(2 Delta))
+
+    @property
+    def kernel_rows(self) -> np.ndarray:
+        """(3, n) f32 block for the kernel's aux rows 2-4
+        (``kernels/llg_rk4.py`` layout: alpha, B_k, g_scale)."""
+        return np.stack([self.alpha, self.b_aniso,
+                         self.g_scale]).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSample:
+    """One sampled device for the scalar (single-junction) paths: corner- and
+    D2D-adjusted ``DeviceParams`` plus the two knobs that do not live on the
+    dataclass — the junction conductance factor and the volume factor (which
+    scales Delta/sigma but deliberately not transport, matching the kernel's
+    variation-plane semantics)."""
+
+    params: DeviceParams
+    g_scale: float = 1.0
+    volume_factor: float = 1.0
+
+    @property
+    def thermal_stability(self) -> float:
+        return self.params.thermal_stability * self.volume_factor
+
+
+@dataclasses.dataclass(frozen=True)
+class VariationSpec:
+    """Hashable description of a process-variation Monte-Carlo scenario.
+
+    ``corners`` is the systematic axis (one packed campaign slice group per
+    corner — corner *count and values are campaign data*, not compile keys);
+    each corner's D2D sigmas set the within-slice per-lane spread.  Draws
+    come from the stateless counter generator, salted by ``(seed, stream,
+    parameter)`` but **not** by corner position: all corners of one spec (and
+    a spec reduced to a single corner via ``at_corner``) consume the *same*
+    standard-normal draws — common random numbers, so corner-to-corner and
+    fused-vs-separate comparisons are paired sample-by-sample and the fused
+    campaign is bit-identical to per-corner launches
+    (``tests/test_variation.py`` pins this).
+    """
+
+    corners: Tuple[ProcessCorner, ...] = (CORNER_TT,)
+    seed: int = 0
+    distribution: str = "lognormal"     # "lognormal" | "normal"
+
+    def __post_init__(self):
+        object.__setattr__(self, "corners", tuple(self.corners))
+        assert self.corners, "VariationSpec needs at least one corner"
+        assert self.distribution in ("lognormal", "normal"), self.distribution
+
+    @property
+    def n_corners(self) -> int:
+        return len(self.corners)
+
+    @property
+    def corner_names(self) -> Tuple[str, ...]:
+        return tuple(c.name for c in self.corners)
+
+    @property
+    def is_nominal(self) -> bool:
+        return all(c.is_nominal for c in self.corners)
+
+    def at_corner(self, index: int) -> "VariationSpec":
+        """Single-corner view (same seed/distribution — same D2D draws)."""
+        return dataclasses.replace(self, corners=(self.corners[index],))
+
+    @classmethod
+    def from_g_sigma(cls, g_sigma: float, seed: int = 0) -> "VariationSpec":
+        """The spec equivalent of the legacy ``AnalogConfig.g_sigma``
+        conductance-only lognormal: a nominal corner whose junction
+        resistance spread reproduces a mean-preserving lognormal on the
+        conductance (1/r of a lognormal is a lognormal with the same
+        sigma)."""
+        return cls(corners=(dataclasses.replace(CORNER_TT, name="tt/d2d",
+                                                sigma_r=float(g_sigma)),),
+                   seed=seed)
+
+    # -- draws ---------------------------------------------------------------
+    def _normals(self, param_id: int, n: int, stream: int) -> np.ndarray:
+        """(n,) standard normals for one varied parameter — pure function of
+        (seed, stream, param_id, lane)."""
+        from repro.kernels import noise   # lazy: keep params import-light
+
+        import jax.numpy as jnp
+
+        base = (int(self.seed) * _VAR_GOLD +
+                (int(stream) + 1) * _VAR_STREAM) & 0xFFFFFFFF
+        lanes = noise.cell_seeds(base, n)
+        # jnp (not numpy) counter: uint32 wraparound in the mixer is the
+        # point, and numpy scalars warn on it
+        z, _ = noise.normal_pair(lanes, jnp.uint32(param_id))
+        return np.asarray(z, np.float64)
+
+    def _factor(self, center: float, sigma: float, param_id: int, n: int,
+                stream: int, mean_preserving_reciprocal: bool = False
+                ) -> np.ndarray:
+        """(n,) multiplicative factors ~ D2D(center, sigma)."""
+        if sigma == 0.0:
+            return np.full(n, float(center))
+        z = self._normals(param_id, n, stream)
+        if self.distribution == "normal":
+            f = np.maximum(center * (1.0 + sigma * z), 0.05 * center)
+            if mean_preserving_reciprocal:
+                # E[1/(1+sigma z)] ~ 1 + sigma^2: rescale so the drawn
+                # resistance keeps E[1/r] ~ 1/center to O(sigma^4)
+                f = f * (1.0 + sigma * sigma)
+            return f
+        if mean_preserving_reciprocal:
+            # resistance: E[1/r] = 1/center, so the conductance the
+            # write-verify loop targets keeps its mean
+            return center * np.exp(sigma * z + 0.5 * sigma * sigma)
+        return center * np.exp(sigma * z - 0.5 * sigma * sigma)
+
+    def lane_factors(self, corner: ProcessCorner, n: int, stream: int = 0
+                     ) -> np.ndarray:
+        """(4, n) float64 factors (alpha, b_aniso, volume, r) for ``n`` lanes
+        of one packed slice.  ``stream`` decorrelates independent slices
+        (the campaign packer passes the temperature index; the analog
+        programmer uses 0/1 for the pos/neg array)."""
+        return np.stack([
+            self._factor(corner.alpha_factor, corner.sigma_alpha,
+                         _PID_ALPHA, n, stream),
+            self._factor(corner.b_aniso_factor, corner.sigma_b_aniso,
+                         _PID_B_ANISO, n, stream),
+            self._factor(corner.volume_factor, corner.sigma_volume,
+                         _PID_VOLUME, n, stream),
+            self._factor(corner.r_factor, corner.sigma_r, _PID_R, n, stream,
+                         mean_preserving_reciprocal=True),
+        ])
+
+    def lane_rows(self, p: DeviceParams, corner: ProcessCorner, n: int,
+                  dt: float, temperature: Optional[float] = None,
+                  stream: int = 0) -> LaneRows:
+        """Per-lane physical rows for one campaign slice: varied device
+        constants plus the derived Brown sigma and Boltzmann tilt scale
+        (volume and damping drive sigma; volume and anisotropy drive
+        Delta)."""
+        t = float(p.temperature if temperature is None else temperature)
+        f = self.lane_factors(corner, n, stream)
+        alpha = p.alpha * f[0]
+        b_aniso = p.b_aniso * f[1]
+        volume = p.volume * f[2]
+        g_scale = 1.0 / f[3]
+        sigma = np.sqrt(2.0 * alpha * KB * t / (GAMMA * p.ms * volume * dt))
+        delta = 0.5 * b_aniso * p.ms * volume / (KB * t)
+        theta0 = np.sqrt(1.0 / (2.0 * np.maximum(delta, 1.0)))
+        return LaneRows(alpha=alpha, b_aniso=b_aniso, g_scale=g_scale,
+                        volume=volume, sigma=sigma, theta0=theta0)
+
+    def sample_device(self, p: DeviceParams, corner_index: int = 0,
+                      lane: int = 0, stream: int = 0) -> DeviceSample:
+        """One sampled device (lane ``lane`` of the D2D draw) for the scalar
+        single-junction paths — ``core.device.simulate_write`` accepts it, so
+        the single-device baseline and the campaign engine share one
+        definition of what a corner means (parity at variation=0 is exact:
+        every factor is then literally 1.0)."""
+        f = self.lane_factors(self.corners[corner_index], lane + 1,
+                              stream)[:, lane]
+        return DeviceSample(
+            params=dataclasses.replace(p, alpha=float(p.alpha * f[0]),
+                                       b_aniso=float(p.b_aniso * f[1])),
+            g_scale=float(1.0 / f[3]),
+            volume_factor=float(f[2]),
+        )
 
 # Fig. 3 anchor points from the paper (voltage -> (write latency [s], energy [J]))
 PAPER_FIG3_AFMTJ: Tuple[Tuple[float, float, float], ...] = (

@@ -18,8 +18,11 @@ Signal chain (DESIGN.md §6):
      access transistor): the positive cell stores max(w, 0), the negative
      cell max(-w, 0), both riding on the G_AP floor.  Programming is
      write-verify pre-compensated (the linear map targets effective
-     conductance), so device-to-device variation (``g_sigma``, lognormal on
-     the junction) is the residual programming error; cells whose
+     conductance), so device-to-device variation — a single-corner
+     ``core.params.VariationSpec`` whose junction resistance factor
+     perturbs the programmed conductance (``g_sigma`` survives as a
+     deprecated alias that constructs the equivalent spec) — is the
+     residual programming error; cells whose
      write-verify attempt budget ran out (``write_ber``, measured by
      ``imc.write_path`` — DESIGN.md §7) stay at the erased G_AP floor.
   2. **IR drop** — each differential line attenuates by its own column
@@ -46,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -55,7 +59,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.circuit.bitline import BitlineParams, cell_conductance, column_ir_drop
-from repro.core.params import AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams
+from repro.core.params import (AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams,
+                               VariationSpec)
 from repro.kernels.bitline_mac import bitline_mac_pallas
 from repro.kernels.ops import _default_interpret
 from repro.kernels.xnor_gemm import xnor_gemm_pallas
@@ -68,7 +73,10 @@ class AnalogConfig:
     adc_bits: int = 6              # 0 = ideal ADC (no quantization)
     tmr: Optional[float] = None    # device TMR override (None = device default)
     v_read: float = 0.1            # DAC full-scale read voltage [V]
-    g_sigma: float = 0.0           # lognormal device-to-device conductance sigma
+    g_sigma: float = 0.0           # DEPRECATED alias: lognormal D2D junction
+                                   # conductance sigma — internally rewritten
+                                   # to ``VariationSpec.from_g_sigma`` (with a
+                                   # DeprecationWarning); set ``variation``
     ir_drop: bool = True           # per-column bit-line IR attenuation
     full_scale_sigmas: float = 4.0 # ADC full scale in column-current sigmas
     seed: int = 0                  # programming-variation draw
@@ -76,6 +84,12 @@ class AnalogConfig:
                                    # cell's write-verify budget ran out and it
                                    # still sits at the erased G_AP floor
                                    # (measured by ``imc.write_path``)
+    # Single source of truth for D2D / process-corner draws (DESIGN.md §9):
+    # a single-corner VariationSpec whose junction resistance factor
+    # (systematic r_factor x lognormal sigma_r) perturbs the programmed
+    # junction conductance — same spec, same counter-RNG streams as the
+    # write-path and campaign-engine variation planes.
+    variation: Optional[VariationSpec] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +117,29 @@ def _device_for(kind: str, cfg: AnalogConfig) -> DeviceParams:
     return dev
 
 
+def _resolved_variation(cfg: AnalogConfig) -> Optional[VariationSpec]:
+    """The D2D spec programming actually uses: ``cfg.variation``, or the
+    deprecated ``g_sigma`` rewritten to its equivalent spec (the reciprocal
+    of the spec's mean-conductance-preserving lognormal resistance draw is
+    exactly the old mean-preserving lognormal on the conductance)."""
+    if cfg.variation is not None:
+        assert cfg.g_sigma == 0.0, (
+            "set either AnalogConfig.variation or the deprecated g_sigma, "
+            "not both — fold the D2D sigma into the spec's sigma_r")
+        assert cfg.variation.n_corners == 1, (
+            "read-path programming models one corner's array; sweep corners "
+            "by programming one AnalogConfig per corner (spec.at_corner)")
+        return cfg.variation
+    if cfg.g_sigma > 0.0:
+        warnings.warn(
+            "AnalogConfig.g_sigma is deprecated; pass variation="
+            "VariationSpec.from_g_sigma(g_sigma, seed) instead (single "
+            "source of truth for D2D draws, DESIGN.md §9)",
+            DeprecationWarning, stacklevel=3)
+        return VariationSpec.from_g_sigma(cfg.g_sigma, seed=cfg.seed)
+    return None
+
+
 def program_weights(
     w: jnp.ndarray,                  # (K, N) float weights
     kind: str = "afmtj",
@@ -127,17 +164,23 @@ def program_weights(
     tgt_pos = g_ap_eff + jnp.maximum(wn, 0.0) * g_fs
     tgt_neg = g_ap_eff + jnp.maximum(-wn, 0.0) * g_fs
 
-    if cfg.g_sigma > 0.0:
-        # variation lives on the junction; push the write-verify target back
-        # through the access FET, perturb, and come forward again
-        def perturb(tgt, key):
-            g_j = tgt / (1.0 - bl.r_access * tgt)
-            eps = jax.random.normal(key, tgt.shape)
-            g_j = g_j * jnp.exp(cfg.g_sigma * eps - 0.5 * cfg.g_sigma**2)
-            return cell_conductance(g_j, bl)
+    spec = _resolved_variation(cfg)
+    if spec is not None:
+        # variation lives on the junction (DESIGN.md §9): push the
+        # write-verify target back through the access FET, apply the
+        # spec's per-junction resistance factor (systematic corner x D2D
+        # draw, same counter-RNG streams as the write path), come forward
+        # again.  Streams 0/1 decorrelate the pos/neg array.
+        corner = spec.corners[0]
 
-        k1, k2 = jax.random.split(jax.random.PRNGKey(cfg.seed))
-        g_pos, g_neg = perturb(tgt_pos, k1), perturb(tgt_neg, k2)
+        def perturb(tgt, stream):
+            g_j = tgt / (1.0 - bl.r_access * tgt)
+            r_f = spec.lane_factors(corner, tgt.size, stream=stream)[3]
+            g_scale = jnp.asarray(
+                (1.0 / r_f).reshape(tgt.shape), jnp.float32)
+            return cell_conductance(g_j * g_scale, bl)
+
+        g_pos, g_neg = perturb(tgt_pos, 0), perturb(tgt_neg, 1)
     else:
         g_pos, g_neg = tgt_pos, tgt_neg
 

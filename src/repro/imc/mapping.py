@@ -161,16 +161,21 @@ def accuracy_surface(
     adc_bits: Sequence[int] = (4, 6, 8),
     tmrs: Sequence[float] = (0.8, 5.0),
     g_sigma: float = 0.0,
+    variation=None,
     **kw,
 ) -> Dict[Tuple[int, float], "AccuracyReport"]:
     """Accuracy-vs-``adc_bits``-vs-TMR surface for one arch: the functional
-    companion of ``map_arch_decode``'s latency/energy point."""
+    companion of ``map_arch_decode``'s latency/energy point.  ``variation``
+    (a single-corner ``core.params.VariationSpec``) is the D2D /
+    process-corner knob; ``g_sigma`` is its deprecated conductance-only
+    alias (DESIGN.md §9)."""
     from repro.imc.analog_pipeline import AnalogConfig
 
     out = {}
     for bits in adc_bits:
         for tmr in tmrs:
-            acfg = AnalogConfig(adc_bits=bits, tmr=tmr, g_sigma=g_sigma)
+            acfg = AnalogConfig(adc_bits=bits, tmr=tmr, g_sigma=g_sigma,
+                                variation=variation)
             out[(bits, tmr)] = decode_projection_accuracy(
                 cfg, kind=kind, analog_cfg=acfg, **kw)
     return out

@@ -17,7 +17,8 @@ from __future__ import annotations
 import functools
 from typing import Optional, Tuple
 
-from repro.core.params import AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams
+from repro.core.params import (AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams,
+                               VariationSpec)
 
 # Pulse ladders bracketing each device's thermal switching tail; the solver
 # returns the smallest rung with WER <= target, so rung spacing is the
@@ -45,6 +46,7 @@ def wer_margined_pulse(
     use_cache: bool = True,
     ladder: Optional[Tuple[float, ...]] = None,
     temperatures: Optional[Tuple[float, ...]] = None,
+    variation: Optional[VariationSpec] = None,
 ) -> float:
     """Smallest ladder pulse [s] with WER <= ``wer_target`` at ``v_write``.
 
@@ -65,6 +67,13 @@ def wer_margined_pulse(
     (temperature is a per-lane kernel input, DESIGN.md §8) and the
     returned pulse is the smallest rung meeting the WER target at *every*
     temperature.  Default: the device's nominal temperature only.
+
+    ``variation`` widens the worst case over *process corners* too
+    (DESIGN.md §9): the (corner x T x pulse-ladder) grid still rides one
+    fused launch — corners are per-lane kernel data — and the returned
+    pulse is the smallest rung meeting the WER target at every (corner,
+    temperature) cell, the margin the companion paper's variation-
+    resilient write drivers actually schedule.
     """
     # lazy: keep `import repro.imc` free of the campaign/kernels stack
     # (closed-form consumers never pay for Pallas at package-import time)
@@ -78,7 +87,10 @@ def wer_margined_pulse(
 
     grid = CampaignGrid(voltages=(float(v_write),), pulse_widths=pulses,
                         temperatures=temps, n_samples=n_samples,
-                        dt=DEVICE_DT[kind], seed=seed)
+                        dt=DEVICE_DT[kind], seed=seed, variation=variation)
     res = run_campaign(p, grid, use_cache=use_cache)
-    return max(res.pulse_for_wer(wer_target, t_index=ti, v_index=0)
+    # corner_index=None -> worst corner at each pulse (no-op when the grid
+    # has no variation axis); the outer max covers the temperature range
+    return max(res.pulse_for_wer(wer_target, t_index=ti, v_index=0,
+                                 corner_index=None)
                for ti in range(len(temps)))

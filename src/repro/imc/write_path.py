@@ -42,6 +42,14 @@ Modeling conventions (documented, not hidden):
   charge (paper Sec. III-B).  Both are explicit policy knobs for
   non-pipelined accounting.
 
+Process variation (DESIGN.md §9): ``WritePolicy.variation`` programs the
+array as *sampled devices* — a single-corner ``VariationSpec`` draws each
+cell's alpha/B_k/volume/RA once, holds the draw across that cell's
+retries (a retry re-pulses the same junction with fresh thermal history),
+and scales both the STT drive and the energy accounting by the cell's own
+conductance; ``write_verify_corners`` sweeps a multi-corner spec into
+per-corner measured distributions on paired random numbers.
+
 Performance note (DESIGN.md §8): retry rounds are recompile-free.  The
 engine pads each round's shrinking cell set to a power-of-two shape bucket
 (``campaign.bucket_cells`` — extra lanes carry a zero step budget and cost
@@ -58,14 +66,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.campaign.engine import run_campaign
+from repro.campaign.engine import EARLY_EXIT_CHUNK, run_campaign, run_ensemble
 from repro.campaign.grid import CampaignGrid
-from repro.core.params import AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams
+from repro.core.params import (AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams,
+                               VariationSpec)
 from repro.imc.write_margin import DEVICE_DT
 
 
@@ -104,6 +114,11 @@ class WritePolicy:
     seed: int = 0
     backend: str = "pallas"
     use_cache: bool = True
+    # Optional single-corner process-variation spec (DESIGN.md §9): D2D
+    # parameter draws are per *device* and persist across retry rounds — a
+    # retry re-pulses the same junction with fresh thermal history.  Use
+    # ``write_verify_corners`` to sweep the corners of a multi-corner spec.
+    variation: Optional[VariationSpec] = None
 
     def resolved_pulse(self, kind: str) -> float:
         if self.pulse is not None:
@@ -201,7 +216,16 @@ def write_verify(kind: str, n_cells: int,
     (``CampaignGrid.seed`` folds in the round index), horizon = one pulse.
     Success is read off the first-crossing row; failures re-enter the next
     round.  Deterministic at a fixed ``policy.seed``.
+
+    With ``policy.variation`` (a single-corner spec) each cell is a
+    *sampled device*: corner/D2D parameter rows ride the kernel's
+    variation plane, stay fixed across that cell's retries, and scale the
+    two-state energy accounting by the cell's own conductance — slow-
+    corner arrays retry more and pay more energy per attempt
+    (``_write_verify_variation``).
     """
+    if policy.variation is not None:
+        return _write_verify_variation(kind, n_cells, policy)
     p = _params_for(kind)
     v = float(policy.v_write)
     pulse = policy.resolved_pulse(kind)
@@ -250,6 +274,116 @@ def write_verify(kind: str, n_cells: int,
                             attempts=attempts, success=success,
                             crossing_time=crossing, energy=energy,
                             elapsed_s=elapsed, rounds=rounds)
+
+
+def _write_verify_variation(kind: str, n_cells: int,
+                            policy: WritePolicy) -> ArrayWriteResult:
+    """Write-verify under per-device process variation (DESIGN.md §9).
+
+    One D2D draw up front fixes every cell's device sample (alpha, B_k,
+    volume -> Brown sigma / Boltzmann tilt, and the RA factor -> drive and
+    energy conductances); each retry round then integrates the surviving
+    cells through ``run_ensemble`` with the sampled rows on the kernel's
+    variation plane — the lanes renumber per round but index back into the
+    same per-device rows, so a cell's parameters persist across its
+    retries while its thermal history is fresh (round-folded seed).
+    Rounds stay recompile-free exactly like the nominal path: shape
+    buckets + pow2-quantized horizon under a per-lane budget.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import llg
+
+    p = _params_for(kind)
+    spec = policy.variation
+    assert spec is not None and spec.n_corners == 1, (
+        "write_verify programs one corner's array; sweep corners with "
+        "write_verify_corners")
+    v = float(policy.v_write)
+    pulse = policy.resolved_pulse(kind)
+    dt = policy.resolved_dt(kind)
+    temp = float(policy.temperature if policy.temperature is not None
+                 else p.temperature)
+    # horizon: one step past the pulse so the never-crossed sentinel
+    # strictly exceeds it (same rule as CampaignGrid.n_steps)
+    n_steps = int(math.ceil(pulse / dt)) + 1
+
+    rows = spec.lane_rows(p, spec.corners[0], n_cells, dt, temperature=temp)
+    kernel_rows = rows.kernel_rows                      # (3, n_cells) f32
+    g_p = (1.0 / p.r_parallel) * rows.g_scale           # per-cell [S]
+    g_ap = (1.0 / p.r_antiparallel) * rows.g_scale
+    e_rc = v * v * g_p * policy.t_rc
+
+    attempts = np.zeros(n_cells, dtype=np.int64)
+    success = np.zeros(n_cells, dtype=bool)
+    crossing = np.full(n_cells, np.nan)
+    energy = np.zeros(n_cells)
+    remaining = np.arange(n_cells)
+
+    t0 = time.time()
+    rounds = 0
+    for rnd in range(policy.max_attempts):
+        if remaining.size == 0:
+            break
+        rounds += 1
+        m = int(remaining.size)
+        seed_r = policy.seed * 1009 + rnd
+        # fresh Boltzmann tilt per round, scaled by each survivor's own
+        # theta0 (mirrors grid._plane_tilt_draws at t_index 0)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed_r), 0)
+        k_th, k_ph = jax.random.split(key)
+        zs = jnp.abs(jax.random.normal(k_th, (m,)))
+        ph = jax.random.uniform(k_ph, (m,), maxval=2 * jnp.pi)
+        th = zs * jnp.asarray(rows.theta0[remaining], jnp.float32) + 0.01
+        m0 = jax.vmap(lambda t, f: llg.initial_state(p, t, f))(th, ph)
+        res = run_ensemble(
+            p, m0, jnp.full((m,), v, jnp.float32), dt, n_steps,
+            seed=seed_r, backend=policy.backend, chunk=EARLY_EXIT_CHUNK,
+            lane_params=kernel_rows[:, remaining],
+            sigma_lanes=rows.sigma[remaining])
+        ct = res.crossing_time                          # (m,) [s]
+        ok = ct <= pulse
+
+        attempts[remaining] += 1
+        gp_r, gap_r = g_p[remaining], g_ap[remaining]
+        e_att = np.where(ok,
+                         v * v * (gp_r * ct + gap_r * (pulse - ct)),
+                         v * v * gp_r * pulse)
+        energy[remaining] += e_att + e_rc[remaining] + policy.e_verify
+        done = remaining[ok]
+        success[done] = True
+        crossing[done] = ct[ok]
+        remaining = remaining[~ok]
+    elapsed = time.time() - t0
+
+    return ArrayWriteResult(kind=kind, policy=policy, pulse=pulse, dt=dt,
+                            attempts=attempts, success=success,
+                            crossing_time=crossing, energy=energy,
+                            elapsed_s=elapsed, rounds=rounds)
+
+
+def write_verify_corners(
+    kind: str, n_cells: int,
+    policy: WritePolicy = WritePolicy(),
+    spec: Optional[VariationSpec] = None,
+) -> Dict[str, ArrayWriteResult]:
+    """Measured per-corner write distributions: one retry schedule per
+    process corner of ``spec`` (default: ``policy.variation``).
+
+    Corners share D2D draws and per-round tilt/thermal streams (common
+    random numbers — ``VariationSpec.lane_factors`` is salted by stream,
+    not corner position), so corner-to-corner retry/latency/energy deltas
+    are paired per cell.  Returns ``{corner_name: ArrayWriteResult}``.
+    """
+    spec = spec if spec is not None else policy.variation
+    assert spec is not None, "write_verify_corners needs a VariationSpec"
+    return {
+        corner.name: write_verify(
+            kind, n_cells,
+            dataclasses.replace(policy, variation=spec.at_corner(ci)))
+        for ci, corner in enumerate(spec.corners)
+    }
 
 
 def program_bits(target: np.ndarray, kind: str = "afmtj",
@@ -306,6 +440,7 @@ def measured_write_timings(
     n_rows: int = 16,
     seed: int = 0,
     use_cache: bool = True,
+    variation: Optional[VariationSpec] = None,
 ) -> MeasuredWrite:
     """Row-granular write timing from the measured retry distribution.
 
@@ -314,10 +449,12 @@ def measured_write_timings(
     cycle) and the mean per-bit energy.  lru-cached in process; the
     underlying campaigns hit the on-disk cache, so hierarchy rebuilds pay
     only the reduction.  Percentile resolution is bounded by ``n_rows``.
+    ``variation`` (hashable, single-corner) sizes the timings against a
+    process corner's measured distribution instead of the nominal device.
     """
     policy = WritePolicy(v_write=float(v_write), pulse=pulse, t_rc=float(t_rc),
                          max_attempts=int(max_attempts), seed=int(seed),
-                         use_cache=use_cache)
+                         use_cache=use_cache, variation=variation)
     res = write_verify(kind, int(cols) * int(n_rows), policy)
     row_att = res.row_attempts(int(cols))
     return MeasuredWrite(

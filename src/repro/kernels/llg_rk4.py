@@ -13,7 +13,12 @@ cell of a subarray (and every Monte-Carlo sample) — restructured for TPU:
   for any realistic step count.
 * Device constants (gamma, alpha, B_E, B_k, RK4 dt, transport constants for
   the self-consistent a_J(theta) drive) are closed over as compile-time
-  scalars — they are fixed per device kind.
+  scalars by default — fixed per device kind.  With a **variation plane**
+  (``lane_params``, DESIGN.md §9) the aux input grows from ``(2, cells)``
+  to ``(5, cells)`` and per-lane alpha / B_k / junction-conductance-scale
+  rows override the scalars: process corners and D2D parameter draws are
+  then campaign *data*, so an (corner x temperature x voltage x sample)
+  grid rides one launch with one compile.
 * Thermal field (``seeds`` given): Brown's Langevin term, sampled per step
   per sublattice component from the stateless counter-based generator in
   ``kernels/noise.py``.  Each lane carries its own uint32 stream seed and
@@ -51,17 +56,32 @@ from repro.kernels import noise
 CELL_TILE = 512
 ROWS = 8
 AUX_ROWS = 2     # aux plane: row 0 = per-lane sigma [T], row 1 = step budget
+# Variation plane (DESIGN.md §9): the aux input grows three per-lane device
+# parameter rows, so process corners and D2D draws are campaign *data* —
+# rows 2-4 = Gilbert alpha, anisotropy B_k [T], junction conductance factor
+# g_scale (= 1/r_factor; scales the self-consistent a_J drive).  Exchange
+# B_E, the field-like ratio and the transport prefactor stay compile-time
+# (not varied — see core.params.ProcessCorner).
+VAR_ROWS = 3
+VAR_AUX_ROWS = AUX_ROWS + VAR_ROWS
 
 
-def _rhs(m1, m2, aj, p: DeviceParams, bth1=None, bth2=None):
+def _rhs(m1, m2, aj, p: DeviceParams, bth1=None, bth2=None,
+         alpha=None, bk=None):
     """Vectorized dual-sublattice LLG RHS on (3, n) component stacks.
 
     ``bth1``/``bth2``: optional per-sublattice thermal field component
     triples [T], added to the deterministic effective field (Brown's
     Langevin term, held constant across the RK4 substages of one step —
     same convention as ``core.montecarlo``).
+
+    ``alpha``/``bk``: optional per-lane rows overriding the compile-time
+    device constants (the variation plane).  ``None`` keeps the scalar
+    closure — the legacy compiled graph, bit-for-bit.
     """
-    alpha, be, bk, beta = p.alpha, p.b_exchange, p.b_aniso, p.beta_flt
+    be, beta = p.b_exchange, p.beta_flt
+    alpha = p.alpha if alpha is None else alpha
+    bk = p.b_aniso if bk is None else bk
 
     def cross(a, b):
         return (
@@ -97,27 +117,36 @@ def _renorm(m):
     return (m[0] * inv, m[1] * inv, m[2] * inv)
 
 
-def _aj_from_v(v, nz, p: DeviceParams):
-    """Self-consistent STT drive: a_J = pref * V * G(n_z) / A (Julliere)."""
+def _aj_from_v(v, nz, p: DeviceParams, g_scale=None):
+    """Self-consistent STT drive: a_J = pref * V * G(n_z) / A (Julliere).
+
+    ``g_scale``: optional per-lane junction conductance factor (RA/TMR
+    resistance corner, variation plane row 4)."""
     g_p = 1.0 / p.r_parallel
     g_ap = 1.0 / p.r_antiparallel
     g = 0.5 * (g_p + g_ap) + 0.5 * (g_p - g_ap) * nz
-    return p.stt_prefactor * v * g / p.area
+    aj = p.stt_prefactor * v * g / p.area
+    return aj if g_scale is None else aj * g_scale
 
 
 def _make_body(p: DeviceParams, dt: float, n_steps: int,
-               switch_threshold: float, sigma, seeds, v, budget=None):
+               switch_threshold: float, sigma, seeds, v, budget=None,
+               lane_params=None):
     """Build the per-step body; ``seeds`` is None for the deterministic
     path (keeps the compiled graph identical to the pre-thermal kernel).
     ``sigma`` is a scalar or per-lane row; ``budget`` (per-lane step
     budget, f32) masks updates for lanes past their horizon — with
     ``budget == n_steps`` everywhere the masked graph computes the exact
-    same values as the unmasked one."""
+    same values as the unmasked one.  ``lane_params`` is the optional
+    (alpha, B_k, g_scale) row triple of the variation plane."""
+    alpha = bk = g_scale = None
+    if lane_params is not None:
+        alpha, bk, g_scale = lane_params
 
     def body(i, carry):
         m1, m2, crossed = carry
         nz = 0.5 * (m1[2] - m2[2])
-        aj = _aj_from_v(v, nz, p)
+        aj = _aj_from_v(v, nz, p, g_scale)
 
         if seeds is not None:
             d1, d2 = noise.thermal_draws(seeds, i)
@@ -127,7 +156,7 @@ def _make_body(p: DeviceParams, dt: float, n_steps: int,
             bth1 = bth2 = None
 
         def f(m1, m2):
-            return _rhs(m1, m2, aj, p, bth1, bth2)
+            return _rhs(m1, m2, aj, p, bth1, bth2, alpha=alpha, bk=bk)
 
         k1a, k1b = f(m1, m2)
         m1h = tuple(a + 0.5 * dt * k for a, k in zip(m1, k1a))
@@ -178,9 +207,13 @@ def _llg_kernel(state_ref, out_ref, *, p: DeviceParams, dt: float,
 
 def _llg_thermal_kernel(state_ref, seeds_ref, aux_ref, out_ref, *,
                         p: DeviceParams, dt: float, n_steps: int,
-                        switch_threshold: float, chunk: int):
+                        switch_threshold: float, chunk: int,
+                        variation: bool = False):
     """Thermal kernel: per-lane sigma (aux row 0), per-lane step budget
-    (aux row 1), optional chunked early exit (``chunk > 0``)."""
+    (aux row 1), optional chunked early exit (``chunk > 0``).  With
+    ``variation`` the aux plane carries three more per-lane device rows
+    (2 = alpha, 3 = B_k, 4 = g_scale) and the RK4 body reads those instead
+    of the compile-time scalars — process corners become launch data."""
     s = state_ref[...]
     m1 = (s[0], s[1], s[2])
     m2 = (s[3], s[4], s[5])
@@ -188,10 +221,12 @@ def _llg_thermal_kernel(state_ref, seeds_ref, aux_ref, out_ref, *,
     seeds = seeds_ref[0]
     sigma = aux_ref[0]
     budget = aux_ref[1]
+    lane_params = ((aux_ref[2], aux_ref[3], aux_ref[4]) if variation
+                   else None)
     crossed = jnp.full_like(v, float(n_steps))
 
     body = _make_body(p, dt, n_steps, switch_threshold, sigma, seeds, v,
-                      budget=budget)
+                      budget=budget, lane_params=lane_params)
     if chunk <= 0:
         m1, m2, crossed = jax.lax.fori_loop(0, n_steps, body,
                                             (m1, m2, crossed))
@@ -231,6 +266,9 @@ def llg_rk4_pallas(
     seeds: jnp.ndarray | None = None,   # (cells,) or (1, cells) uint32
     step_budget=None,             # optional (cells,) f32 per-lane step budget
     chunk: int = 0,               # >0: early-exit chunk size (steps)
+    lane_params=None,             # optional (VAR_ROWS, cells) f32 rows:
+                                  # alpha, B_k [T], g_scale — the variation
+                                  # plane (DESIGN.md §9)
 ) -> jnp.ndarray:
     rows, cells = state.shape
     assert rows == ROWS and cells % CELL_TILE == 0, state.shape
@@ -241,6 +279,7 @@ def llg_rk4_pallas(
         assert isinstance(thermal_sigma, (int, float)) and thermal_sigma == 0.0, \
             "thermal path needs per-cell stream seeds"
         assert step_budget is None, "step budgets ride the thermal kernel"
+        assert lane_params is None, "the variation plane rides the thermal kernel"
         kern = functools.partial(
             _llg_kernel, p=p, dt=dt, n_steps=n_steps,
             switch_threshold=switch_threshold,
@@ -262,10 +301,19 @@ def llg_rk4_pallas(
     else:
         budget = jnp.broadcast_to(
             jnp.asarray(step_budget, jnp.float32), (cells,))
-    aux = jnp.stack([sigma, budget])                     # (AUX_ROWS, cells)
+    variation = lane_params is not None
+    if variation:
+        lp = jnp.asarray(lane_params, jnp.float32)
+        assert lp.shape == (VAR_ROWS, cells), (lp.shape, cells)
+        aux = jnp.concatenate([jnp.stack([sigma, budget]), lp])
+        aux_rows = VAR_AUX_ROWS
+    else:
+        aux = jnp.stack([sigma, budget])                 # (AUX_ROWS, cells)
+        aux_rows = AUX_ROWS
     kern = functools.partial(
         _llg_thermal_kernel, p=p, dt=dt, n_steps=n_steps,
         switch_threshold=switch_threshold, chunk=int(chunk),
+        variation=variation,
     )
     return pl.pallas_call(
         kern,
@@ -274,7 +322,7 @@ def llg_rk4_pallas(
         in_specs=[
             pl.BlockSpec((ROWS, CELL_TILE), lambda i: (0, i)),
             pl.BlockSpec((1, CELL_TILE), lambda i: (0, i)),
-            pl.BlockSpec((AUX_ROWS, CELL_TILE), lambda i: (0, i)),
+            pl.BlockSpec((aux_rows, CELL_TILE), lambda i: (0, i)),
         ],
         out_specs=pl.BlockSpec((ROWS, CELL_TILE), lambda i: (0, i)),
         interpret=interpret,

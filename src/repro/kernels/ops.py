@@ -34,18 +34,21 @@ def llg_rk4(state, p: DeviceParams, dt: float, n_steps: int,
     "p", "dt", "n_steps", "switch_threshold", "chunk"))
 def llg_rk4_thermal(state, seeds, p: DeviceParams, dt: float, n_steps: int,
                     thermal_sigma, switch_threshold: float = 0.9,
-                    step_budget=None, chunk: int = 0):
+                    step_budget=None, chunk: int = 0, lane_params=None):
     """Thermal (Langevin) variant: per-cell counter-RNG streams in ``seeds``
     ((cells,) uint32, see kernels/noise.cell_seeds).  Brown's sigma is
     *traced data* — a scalar or a (cells,) per-lane row — so campaigns
     spanning several temperatures (or write-verify retry rounds at any
     seed) share one compile.  ``step_budget`` (traced, per-lane) caps each
     lane's horizon below the compiled ``n_steps``; ``chunk > 0`` (static)
-    turns on chunked early exit — see kernels/llg_rk4.py."""
+    turns on chunked early exit — see kernels/llg_rk4.py.  ``lane_params``
+    ((3, cells) f32: alpha, B_k, g_scale — also traced) switches on the
+    per-lane device-variation plane (DESIGN.md §9)."""
     return llg_rk4_pallas(state, p, dt, n_steps, switch_threshold,
                           interpret=_default_interpret(),
                           thermal_sigma=thermal_sigma, seeds=seeds,
-                          step_budget=step_budget, chunk=chunk)
+                          step_budget=step_budget, chunk=chunk,
+                          lane_params=lane_params)
 
 
 def pack_states(m0: jnp.ndarray, voltages: jnp.ndarray) -> jnp.ndarray:

@@ -6,6 +6,8 @@ re-implementation.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -25,6 +27,8 @@ def ref_llg_rk4(
     seeds: jnp.ndarray | None = None,   # (cells,) uint32 per-lane streams
     step_budget=None,             # optional (cells,) f32 per-lane step budget
     chunk: int = 0,               # >0: early-exit chunk size (steps)
+    lane_params=None,             # optional (3, cells) f32 variation rows:
+                                  # alpha, B_k [T], g_scale (DESIGN.md §9)
 ) -> jnp.ndarray:
     """Both device families: ``p.n_sublattices`` picks dual-sublattice
     (AFMTJ — the Pallas kernel's allclose target) or single-sublattice
@@ -36,9 +40,25 @@ def ref_llg_rk4(
     per-lane sigma/budget semantics): a lane past ``step_budget`` is frozen
     and records no crossings; with ``chunk > 0`` the whole block exits as
     soon as every lane is done.  Crossing rows are bit-identical to the
-    fixed-horizon path either way."""
+    fixed-horizon path either way.
+
+    ``lane_params`` mirrors the kernel's variation plane by replacing the
+    scalar ``p.alpha`` / ``p.b_aniso`` with ``(cells, 1, 1)`` rows inside
+    the *production* ``llg.llg_rhs`` (broadcasting does the rest) and
+    scaling the self-consistent drive by the per-lane junction conductance
+    factor — same ops, same order, so the per-lane kernel stays
+    allclose-testable against this oracle."""
     cells = state.shape[1]
     n_sub = p.n_sublattices
+    g_scale = None
+    p_lane = p
+    if lane_params is not None:
+        lp = jnp.asarray(lane_params, jnp.float32)
+        assert lp.shape == (3, cells), (lp.shape, cells)
+        p_lane = dataclasses.replace(
+            p, alpha=lp[0].reshape(cells, 1, 1),
+            b_aniso=lp[1].reshape(cells, 1, 1))
+        g_scale = lp[2]
     if n_sub == 1:
         m = state[0:3].T[:, None, :]               # (cells, 1, 3)
     else:
@@ -66,6 +86,8 @@ def ref_llg_rk4(
         nz = llg.order_parameter_z(m)
         g = tmr.conductance_from_cos(nz, p)
         aj = p.stt_prefactor * v * g / p.area
+        if g_scale is not None:
+            aj = aj * g_scale
         if use_noise:
             # identical stream to the Pallas kernel: (cells, n_sub, 3) field
             # from the same per-lane counters (see kernels/noise.py)
@@ -74,7 +96,8 @@ def ref_llg_rk4(
             b_th = sigma * jnp.stack(triples[:n_sub], axis=1)
         else:
             b_th = None
-        m_next = rk4_step(lambda mm, tt: llg.llg_rhs(mm, p, aj, b_th), m, 0.0, dt)
+        m_next = rk4_step(lambda mm, tt: llg.llg_rhs(mm, p_lane, aj, b_th),
+                          m, 0.0, dt)
         nz_new = llg.order_parameter_z(m_next)
         newly = (nz_new < -switch_threshold) & (crossed >= float(n_steps))
         if budget is not None:

@@ -148,9 +148,14 @@ def test_adc_bits_monotonic():
 def test_higher_tmr_tolerates_variation_better():
     """At fixed D2D variation the wider conductance span (higher TMR) must
     give a lower relative error — the paper's TMR-matters claim."""
+    from repro.core.params import VariationSpec
+
     w, x = _wx()
-    lo = mvm_accuracy(w, x, cfg=AnalogConfig(adc_bits=8, tmr=0.8, g_sigma=0.05))
-    hi = mvm_accuracy(w, x, cfg=AnalogConfig(adc_bits=8, tmr=5.0, g_sigma=0.05))
+    var = VariationSpec.from_g_sigma(0.05)     # DESIGN.md §9 D2D spec
+    lo = mvm_accuracy(w, x, cfg=AnalogConfig(adc_bits=8, tmr=0.8,
+                                             variation=var))
+    hi = mvm_accuracy(w, x, cfg=AnalogConfig(adc_bits=8, tmr=5.0,
+                                             variation=var))
     assert hi.nmse < lo.nmse / 2, (lo.nmse, hi.nmse)
 
 
