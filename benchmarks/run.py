@@ -21,10 +21,14 @@ modeled-vs-paper comparison where the paper reports numbers.
                (corner x T x V x S) grid as ONE launch / ONE compile,
                corner values rerun compile-free, per-corner WER/latency
                rows, corner-margined write pulse
+  read       — read-path scenario family (DESIGN.md §10): sub-threshold
+               read-disturb surfaces, accelerated-barrier retention with
+               Arrhenius cross-check, sense-margin yield MC, and (full
+               mode) the measured refresh policy charged into Fig. 4
 
 ``--smoke`` shrinks shapes and skips steady-state warmups so CI can exercise
 kernel-vs-reference parity on every push (honored by ``mvm``, ``wer``,
-``write`` and ``variation``).
+``write``, ``variation`` and ``read``).
 
 ``--json PATH`` additionally writes every emitted row to a machine-readable
 BENCH.json: ``{name, value, units, wall_us, cold_us}`` per row plus run
@@ -614,6 +618,119 @@ def bench_variation():
           "paper's variation-resilient drivers schedule)")
 
 
+def bench_read():
+    """Read-path scenario family (DESIGN.md §10): read-disturb, accelerated
+    retention and sense-margin yield through the fused campaign engine —
+    each kernel-backed scenario is ONE launch with ONE compile (the
+    ``read_one_launch_ok`` pin CI greps), the sense MC is closed-form.
+    Full mode additionally derives the retention+disturb refresh policy and
+    reruns the Fig. 4 comparison with the scrub overhead charged."""
+    import dataclasses
+
+    from repro.campaign.engine import _integrate_sharded
+    from repro.campaign.grid import log_pulses
+    from repro.core.params import CORNER_TT, VariationSpec
+    from repro.imc.read_path import (fit_disturb_model, read_disturb_campaign,
+                                     reads_between_refresh,
+                                     retention_campaign, sense_margin_yield)
+
+    if SMOKE:
+        d_kw = dict(voltages=(0.10, 0.24), pulses=(0.2e-9, 2.0e-9),
+                    temperatures=(300.0, 400.0), n_samples=128)
+        r_kw = dict(accel_factors=(0.05, 0.10), temperatures=(300.0,),
+                    horizons=log_pulses(0.15e-9, 1.2e-9, per_decade=3),
+                    n_samples=96,
+                    variation=VariationSpec(corners=(CORNER_TT,)))
+        n_sense = 2048
+    else:
+        d_kw, r_kw, n_sense = {}, {}, 4096
+    print(f"# read: disturb + retention + sense-margin scenarios "
+          f"({'smoke' if SMOKE else 'full'})")
+    print("name,us_per_call,derived")
+
+    # --- read-disturb: sub-threshold pulses, one fused (V x P x T x S) grid
+    _integrate_sharded._clear_cache()
+    dres, us_d = _t(lambda: read_disturb_campaign("afmtj", use_cache=False,
+                                                  **d_kw))
+    c_d = _integrate_sharded._cache_size()
+    emit("read.disturb.launches", us_d, dres.n_launches)
+    emit("read.disturb.xla_compiles", 0, c_d)
+    v_hi, t_hi = len(dres.grid.voltages) - 1, len(dres.grid.temperatures) - 1
+    p_lo = dres.p1(v_index=0, p_index=-1, t_index=t_hi)
+    p_hi = dres.p1(v_index=v_hi, p_index=-1, t_index=t_hi)
+    emit(f"read.disturb.p1@{dres.grid.voltages[0]:.2f}V", 0, f"{p_lo:.4f}")
+    emit(f"read.disturb.p1@{dres.grid.voltages[v_hi]:.2f}V", 0, f"{p_hi:.4f}")
+    emit("read.disturb.onset_ok", 0, int(p_hi > p_lo))
+
+    # accelerated disturb model: Delta_eff(V) on a barrier-scaled corner,
+    # extrapolated to the operating barrier
+    model, us_f = _t(lambda: fit_disturb_model(
+        "afmtj", use_cache=False,
+        **({"n_samples": 128, "horizon": 2.5e-9} if SMOKE else {})))
+    emit("read.disturb.fit.v_c_V", us_f, f"{model.v_c:.3f}", "V")
+    emit("read.disturb.fit.beta", 0, f"{model.beta:.2f}")
+    p1_op = model.p1(0.05, 0.5e-9, 40.0, 0.25e-9)
+    emit("read.disturb.p1@0.05V.delta40", 0, f"{p1_op:.2e}")
+    emit("read.disturb.reads_per_1e-9_budget", 0,
+         f"{reads_between_refresh(p1_op, 1e-9):.1f}")
+
+    # --- retention: accelerated-barrier corners, log-horizon ladder,
+    # ONE fused launch, Arrhenius cross-check + pinned-slope extrapolation
+    _integrate_sharded._clear_cache()
+    rres, us_r = _t(lambda: retention_campaign("afmtj", use_cache=False,
+                                               **r_kw))
+    c_r = _integrate_sharded._cache_size()
+    emit("read.retention.launches", us_r, rres.result.n_launches)
+    emit("read.retention.xla_compiles", 0, c_r)
+    emit("read.retention.flips_total", 0, int(rres.n_flips.sum()))
+    slope, _ = rres.arrhenius_fit(0, 0)
+    emit("read.retention.arrhenius_slope", 0, f"{slope:.2f}")
+    tau_op = rres.tau_op()
+    for ci, c in enumerate(rres.spec.corners):
+        emit(f"read.retention.{c.name}.tau_op_s", 0,
+             f"{np.nanmin(tau_op[ci]):.2e}", "s")
+    emit("read.retention.worst_tau_op_s", 0, f"{rres.worst_tau_op():.2e}", "s")
+    emit("read_one_launch_ok", 0,
+         int(dres.n_launches == 1 and c_d == 1
+             and rres.result.n_launches == 1 and c_r == 1))
+
+    # --- sense-margin yield: closed-form (D2D x SA-offset) MC per corner
+    sy, us_s = _t(lambda: sense_margin_yield("afmtj", n_samples=n_sense))
+    for ci, name in enumerate(sy.corner_names):
+        emit(f"read.sense_yield.{name}@{sy.v_reads[0]:.2f}V", us_s,
+             f"{sy.yield_surface[ci, 0]:.4f}")
+    v99 = sy.v_read_for_yield(0.999)
+    emit("read.sense_yield.v_read_for_0.999", 0, f"{v99:.2f}", "V")
+    emit("read.sense_yield.t_sense_p99_ps", 0,
+         f"{sy.t_sense.max()*1e12:.1f}", "ps")
+    emit("read.sense_yield.margin_min_mV", 0,
+         f"{sy.margin_min.min()*1e3:.2f}", "mV")
+
+    if SMOKE:
+        return
+    # refresh policy from the measured physics, charged into Fig. 4
+    from repro.imc.evaluate import evaluate_system, summarize
+    from repro.imc.read_path import derive_refresh_policy
+
+    pol, us_p = _t(lambda: derive_refresh_policy("afmtj"))
+    emit("read.refresh.interval_s", us_p, f"{pol.interval:.2e}", "s")
+    emit("read.refresh.limited_by", 0, pol.limited_by)
+    emit("read.refresh.reads_max", 0, f"{pol.reads_max:.1f}")
+    base, _ = _t(evaluate_system, "afmtj")
+    wref, _ = _t(lambda: evaluate_system("afmtj", refresh=pol))
+    sp0, es0 = summarize(base)
+    sp1, es1 = summarize(wref)
+    emit("read.refresh.fig4.avg_speedup_nominal", 0, f"{sp0:.1f}", "x")
+    emit("read.refresh.fig4.avg_speedup_refresh", 0, f"{sp1:.1f}", "x")
+    emit("read.refresh.fig4.avg_energy_saving_refresh", 0, f"{es1:.1f}", "x")
+    r = wref["mat_add"]
+    emit("read.refresh.fig4.mat_add_t_refresh_frac", 0,
+         f"{r.t_refresh/r.t_imc:.3f}")
+    print(f"# scrub every {pol.interval*1e6:.1f} us ({pol.limited_by}-"
+          f"limited): avg speedup {sp0:.1f}x -> {sp1:.1f}x with refresh "
+          "charged (the non-volatility tax the closed-form model ignores)")
+
+
 BENCHES = {
     "table1": bench_table1,
     "fig3": bench_fig3,
@@ -625,6 +742,7 @@ BENCHES = {
     "wer": bench_wer,
     "write": bench_write,
     "variation": bench_variation,
+    "read": bench_read,
 }
 
 

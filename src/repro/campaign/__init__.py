@@ -24,6 +24,8 @@ from repro.campaign.engine import (  # noqa: F401
 from repro.campaign.grid import (  # noqa: F401
     CampaignGrid,
     bucket_cells,
+    log_horizon_bucket,
+    log_pulses,
     pack_campaign,
     pack_plane,
     pack_soa,

@@ -49,8 +49,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.campaign import cache as _cache
-from repro.campaign.grid import (CampaignGrid, next_pow2, pack_campaign,
-                                 pack_soa, pack_variation)
+from repro.campaign.grid import (CampaignGrid, log_horizon_bucket, next_pow2,
+                                 pack_campaign, pack_soa, pack_variation)
 from repro.core.montecarlo import thermal_sigma
 from repro.core.params import DeviceParams
 from repro.kernels import noise, ref
@@ -73,15 +73,23 @@ def brown_sigma(p: DeviceParams, dt: float, temperature: Optional[float] = None
     return thermal_sigma(p, dt)
 
 
-def _quantize_steps(n_steps: int) -> int:
-    """Round the compiled horizon up to a power of two.
+def _quantize_steps(n_steps: int, horizon: str = "pow2") -> int:
+    """Round the compiled horizon up to a shared rung.
 
     The per-lane step-budget row stops every lane at the *true* horizon,
     and the chunked loop exits a tile within one chunk of its slowest
     lane's budget — so the masked tail costs ~nothing at runtime while
     campaigns over different pulse ladders (write-verify sweeps, margin
     ladders) land on a logarithmic number of compiled step counts.
+
+    ``horizon`` picks the ladder: ``"pow2"`` (default — every existing
+    write-path compile pin) or ``"log"`` — the geometric
+    ``grid.log_horizon_bucket`` ladder, ~2 rungs per decade, for retention
+    campaigns whose horizons span decades (DESIGN.md §10).
     """
+    if horizon == "log":
+        return log_horizon_bucket(n_steps)
+    assert horizon == "pow2", horizon
     return next_pow2(n_steps)
 
 
@@ -177,6 +185,7 @@ def run_ensemble(
     chunk: int = 0,
     lane_params=None,                # optional (3, cells) variation rows
     sigma_lanes=None,                # optional (cells,) per-lane Brown sigma
+    horizon: str = "pow2",           # compiled-horizon ladder (chunk > 0)
 ) -> EnsembleResult:
     """Integrate an arbitrary thermal ensemble through the kernel path.
 
@@ -229,7 +238,7 @@ def run_ensemble(
             axis=1).astype(np.float32))
     seeds = noise.cell_seeds(seed, padded)
     n_dev = _usable_devices(padded, devices)
-    n_static = _quantize_steps(n_steps) if chunk > 0 else n_steps
+    n_static = _quantize_steps(n_steps, horizon) if chunk > 0 else n_steps
 
     t0 = time.time()
     out = _integrate_sharded(
@@ -350,6 +359,7 @@ def run_campaign(
     devices: Optional[int] = None,
     chunk: int = EARLY_EXIT_CHUNK,
     max_cells_per_launch: Optional[int] = None,
+    horizon: str = "pow2",
 ) -> CampaignResult:
     """Run (or cache-load) a full Monte-Carlo campaign.
 
@@ -360,7 +370,11 @@ def run_campaign(
     parity checks and throughput baselines).
 
     ``chunk`` sets the early-exit granularity (0 disables early exit and
-    step quantization — the exact fixed-horizon launch).  Campaigns larger
+    step quantization — the exact fixed-horizon launch); ``horizon``
+    selects the compiled-horizon ladder ("pow2" default, "log" for
+    decade-spanning retention sweeps — see ``_quantize_steps``).  Crossing
+    rows are ladder-independent (the budget row stops real lanes at the
+    true horizon), so results cache under the same key.  Campaigns larger
     than ``max_cells_per_launch`` lanes split along (corner x temperature)
     slice boundaries into multiple launches, all dispatched before the
     first device sync, so transfers overlap integration.
@@ -388,7 +402,7 @@ def run_campaign(
                                   from_cache=True, n_launches=0)
 
     n_steps = grid.n_steps
-    n_static = _quantize_steps(n_steps) if chunk > 0 else n_steps
+    n_static = _quantize_steps(n_steps, horizon) if chunk > 0 else n_steps
     if spec is None:
         state, seeds, sigma, budget, spans = pack_campaign(grid, p)
         lane_params = None

@@ -130,6 +130,48 @@ def bucket_cells(cells: int) -> int:
     return CELL_TILE * next_pow2(-(-cells // CELL_TILE))
 
 
+HORIZON_RUNGS_PER_DECADE = 2
+
+
+def log_horizon_bucket(n_steps: int,
+                       per_decade: int = HORIZON_RUNGS_PER_DECADE) -> int:
+    """Smallest rung of a geometric step-count ladder >= ``n_steps``.
+
+    Rungs sit at ``round(10**(k/per_decade))`` for integer k >= 0.  The
+    pow2 quantizer (``next_pow2``) is right for write campaigns, whose
+    horizons span at most a factor of a few — but retention sweeps span
+    *decades* of integration horizon, and pow2 rungs would cost ~3.3
+    compiles per decade.  A log ladder caps that at ``per_decade`` compiles
+    per decade while never over-integrating by more than one rung (the
+    per-lane budget row stops real lanes at the true horizon either way, so
+    crossing rows are unaffected — only compile-cache granularity changes).
+
+    Monotone by construction (minimal k with rung >= n_steps), which the
+    grid property tests pin alongside ``bucket_cells``.
+    """
+    assert n_steps > 0, n_steps
+    assert per_decade > 0, per_decade
+    k = max(0, math.ceil(per_decade * math.log10(n_steps)))
+    while k > 0 and round(10 ** ((k - 1) / per_decade)) >= n_steps:
+        k -= 1
+    while round(10 ** (k / per_decade)) < n_steps:
+        k += 1
+    return int(round(10 ** (k / per_decade)))
+
+
+def log_pulses(t_min: float, t_max: float, per_decade: int = 4
+               ) -> Tuple[float, ...]:
+    """Log-spaced pulse-width ladder [s], endpoints included.
+
+    The natural pulse axis for retention campaigns: the first-crossing row
+    gives the survival fraction at *every* rung from one integration, so a
+    decade-spanning ladder is free once the horizon covers ``t_max``.
+    """
+    assert 0 < t_min < t_max, (t_min, t_max)
+    n = max(2, int(round(per_decade * math.log10(t_max / t_min))) + 1)
+    return tuple(float(t) for t in np.geomspace(t_min, t_max, n))
+
+
 def pack_soa(m0: jnp.ndarray, voltages: jnp.ndarray) -> jnp.ndarray:
     """(cells, n_sub, 3) states + (cells,) drives -> padded ``(8, cells)`` SoA.
 

@@ -6,5 +6,5 @@ Replaces the HSPICE netlist with TPU-friendly behavioral physics:
   subarray  — rows x cols 1T1J array: read / write / multi-row bit-line logic
 """
 from repro.circuit.bitline import BitlineParams, bitline_settle_time, multi_row_current  # noqa: F401
-from repro.circuit.senseamp import SenseAmpParams, sense_delay, resolve_logic  # noqa: F401
+from repro.circuit.senseamp import SenseAmpParams, sa_offsets, sense_delay, resolve_logic  # noqa: F401
 from repro.circuit.subarray import Subarray, SubarrayTimings, make_subarray  # noqa: F401

@@ -9,17 +9,28 @@ what makes multi-row logic slightly slower than single-row reads.  Dual
 references implement XOR/XNOR (output = current between the two refs), per
 Pinatubo-style bit-line computing; single references give (N)AND / (N)OR /
 MAJ.
+
+MC mode (DESIGN.md §10): a latch SA has an input-referred offset from
+transistor mismatch, ~N(0, ``offset_sigma``).  ``sa_offsets`` draws a
+per-lane offset vector from the same stateless counter-RNG the kernels
+use (CRN: a fixed seed gives the *same* offsets across corners and
+read-voltage ladder points, so yield comparisons are paired per lane);
+``sense_delay`` / ``resolve_logic`` accept it as an optional ``offset``
+argument.  ``offset=None`` (default) and ``offset_sigma=0`` are both
+bit-identical to the deterministic path (pinned by
+``tests/test_read_path.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.circuit.bitline import BitlineParams, logic_current_levels, multi_row_current
 from repro.core.params import DeviceParams
+from repro.kernels import noise
 
 
 @jax.tree_util.register_dataclass
@@ -30,12 +41,45 @@ class SenseAmpParams:
     v_logic: float = 1.0          # full-swing output [V]
     r_trans: float = 5.0e3        # current->voltage transimpedance [Ohm]
     e_per_sense: float = 2.0e-15  # energy per sense operation [J]
-    offset_sigma: float = 0.0     # input-referred offset [V] (MC mode)
+    offset_sigma: float = 0.0     # input-referred offset std [V] (MC mode:
+                                  # sa_offsets / sense_delay(offset=...))
 
 
-def sense_delay(di: jnp.ndarray, sa: SenseAmpParams) -> jnp.ndarray:
-    """Sense time for a current differential di [A] from the reference."""
-    dv = jnp.abs(di) * sa.r_trans
+# counter-RNG draw index for SA offsets — disjoint from the thermal-field
+# counters (kernels.noise.thermal_draws uses step*3 + {0,1,2}; drawing at a
+# fixed large counter on a dedicated seed stream keeps streams independent)
+_OFFSET_STREAM = 0x5A0FF5E7
+
+
+def sa_offsets(sa: SenseAmpParams, n: int, seed: int = 0) -> jnp.ndarray:
+    """(n,) input-referred offset draws [V] ~ N(0, offset_sigma).
+
+    Stateless counter-RNG (``kernels.noise``), salted only by ``seed`` and
+    lane index — never by corner or ladder position — so sweeps reuse the
+    same mismatch population (common random numbers).  ``offset_sigma == 0``
+    returns exact zeros: the deterministic path.
+    """
+    if sa.offset_sigma == 0.0:
+        return jnp.zeros((n,), jnp.float32)
+    lanes = noise.cell_seeds(seed ^ _OFFSET_STREAM, n)
+    z, _ = noise.normal_pair(lanes, jnp.uint32(0))
+    return (sa.offset_sigma * z).astype(jnp.float32)
+
+
+def sense_delay(di: jnp.ndarray, sa: SenseAmpParams,
+                offset: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Sense time for a current differential di [A] from the reference.
+
+    ``offset`` (optional, [V], broadcast against ``di``) shifts the latch
+    input differential: an offset toward the reference slows regeneration
+    (and past it, flips the decision — ``resolve_logic`` models that part).
+    ``offset=None`` is bit-identical to a zero offset: |di*r + 0| == |di|*r
+    exactly in IEEE arithmetic.
+    """
+    if offset is None:
+        dv = jnp.abs(di) * sa.r_trans
+    else:
+        dv = jnp.abs(di * sa.r_trans + offset)
     dv = jnp.maximum(dv, 1e-6)
     return sa.tau_latch * jnp.log(sa.v_logic / jnp.minimum(dv, sa.v_logic)) + sa.t_setup
 
@@ -63,15 +107,25 @@ def resolve_logic(
     dev: DeviceParams,
     bl: BitlineParams,
     sa: SenseAmpParams,
+    offset: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Full circuit path for an in-array logic op on ``bits`` (..., n_rows).
 
     Returns (boolean output, sense delay).  The output is derived from the
     *analog* current level — i.e. the logic emerges from the device TMR +
     circuit thresholds, not from a lookup table.
+
+    ``offset`` (optional, [V], broadcast against the bit-line current)
+    is the SA's input-referred offset (MC mode, ``sa_offsets``): referred
+    back to the current domain through ``r_trans`` and added *before* the
+    threshold comparison, so a large-enough offset flips the decision —
+    that is exactly the sense-yield failure mode the read path measures.
+    ``offset=None`` is bit-identical to the deterministic path.
     """
     n_rows = bits.shape[-1]
     i_bl = multi_row_current(bits, dev, bl)
+    if offset is not None:
+        i_bl = i_bl + offset / sa.r_trans
     refs = _refs_for(op, n_rows, dev, bl)
     if op in ("and", "or", "maj"):
         out = i_bl > refs[0]

@@ -54,6 +54,8 @@ class SubarrayTimings:
     write_attempts: float = 1.0        # mean pulses per cell write
     write_residual_ber: float = 0.0    # bit-error rate left after retries
     write_percentile: float | None = None  # None = closed-form single pulse
+    read_yield: float = 1.0            # worst-corner MC sense yield
+    read_percentile: float | None = None   # None = deterministic sense time
 
     @property
     def row_bits(self) -> int:
@@ -118,6 +120,7 @@ def make_subarray(
     sa: SenseAmpParams | None = None,
     wer_target: float | None = None,
     write_percentile: float | None = None,
+    read_percentile: float | None = None,
 ) -> Subarray:
     dev = AFMTJ_PARAMS if kind == "afmtj" else MTJ_PARAMS
     bl = bl or BitlineParams(rows=rows)
@@ -166,9 +169,21 @@ def make_subarray(
     # --- circuit-level read/logic characterization --------------------------
     g_worst = jnp.asarray(1.0 / dev.r_antiparallel)
     t_settle = float(bitline_settle_time(g_worst, bl))
-    i_p = bl.v_read / dev.r_parallel
-    i_ap = bl.v_read / dev.r_antiparallel
-    t_sense = float(sense_delay(jnp.asarray((i_p - i_ap) / 2.0), sa))
+    r_yield = 1.0
+    if read_percentile is not None:
+        # measured read path (DESIGN.md §10): percentile sense time over the
+        # per-lane (corner x D2D x SA-offset) Monte-Carlo at the worst
+        # process corner, plus the worst-corner sense yield.
+        from repro.imc.read_path import measured_read_timings
+
+        mr = measured_read_timings(kind, v_read=bl.v_read,
+                                   percentile=read_percentile, sa=sa, bl=bl)
+        t_sense = mr.t_sense
+        r_yield = mr.read_yield
+    else:
+        i_p = bl.v_read / dev.r_parallel
+        i_ap = bl.v_read / dev.r_antiparallel
+        t_sense = float(sense_delay(jnp.asarray((i_p - i_ap) / 2.0), sa))
     t_read = t_settle + t_sense
     t_logic2 = t_settle + _worst_case_logic_delay(2, dev, bl, sa)
     t_logic3 = t_settle + _worst_case_logic_delay(3, dev, bl, sa)
@@ -193,6 +208,8 @@ def make_subarray(
         write_attempts=w_attempts,
         write_residual_ber=w_ber,
         write_percentile=write_percentile,
+        read_yield=r_yield,
+        read_percentile=read_percentile,
     )
     state = jnp.zeros((rows, cols), dtype=jnp.uint8)
     return Subarray(dev=dev, bl=bl, sa=sa, timings=timings, state=state)

@@ -13,6 +13,9 @@
   analog_pipeline — functional analog MVM through the Pallas bitline/XNOR
               kernels: conductance programming, IR drop, signed ADC
               (DESIGN.md §6)
+  read_path — read-disturb / retention / sense-margin scenario family
+              through the fused campaign engine, measured read timings and
+              the retention+disturb-derived refresh policy (DESIGN.md §10)
 """
 from repro.imc.hierarchy import IMCHierarchy, build_hierarchy  # noqa: F401
 from repro.imc.cpu_model import CPUModel, CORTEX_A72  # noqa: F401
@@ -30,6 +33,14 @@ _WRITE_PATH_EXPORTS = ("WritePolicy", "ArrayWriteResult", "MeasuredWrite",
                        "WriteSurface", "write_verify", "program_bits",
                        "measured_write_timings", "write_surface",
                        "nominal_pulse")
+_READ_PATH_EXPORTS = ("ReadDisturbResult", "DisturbModel", "RetentionResult",
+                      "SenseYieldResult", "SizedRead", "MeasuredRead",
+                      "RefreshPolicy", "read_disturb_campaign",
+                      "fit_disturb_model", "accumulated_disturb",
+                      "reads_between_refresh", "retention_campaign",
+                      "retention_horizons", "sense_margin_yield",
+                      "size_read_drive", "measured_read_timings",
+                      "derive_refresh_policy")
 
 
 def __getattr__(name):
@@ -41,4 +52,8 @@ def __getattr__(name):
         from repro.imc import write_path
 
         return getattr(write_path, name)
+    if name in _READ_PATH_EXPORTS:
+        from repro.imc import read_path
+
+        return getattr(read_path, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -9,11 +9,24 @@ with MTJs the slow writes dominate the pipe, with AFMTJs they hide.
 
 Energy: device energies per bit (from the circuit layer) + per-row-op
 peripheral energy (decoder/driver/controller) + CPU-side dispatch.
+
+Refresh (DESIGN.md §10): a ``RefreshPolicy`` (``imc.read_path``, derived
+from measured retention + read-disturb budgets) makes the scrub controller
+a steady-state bandwidth tax: every ``interval`` seconds each resident data
+row is read and rewritten.  ``evaluate_workload(..., refresh=...)`` charges
+that duty cycle into ``t_imc``/``e_imc`` and surfaces it as
+``t_refresh``/``e_refresh`` in the ``SystemResult`` — so the Fig. 4
+comparison can show the refresh overhead explicitly instead of assuming
+non-volatile means free retention.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import math
+from typing import TYPE_CHECKING, Dict, Optional
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (read_path -> circuit)
+    from repro.imc.read_path import RefreshPolicy
 
 from repro.imc.cpu_model import CORTEX_A72, CPUModel
 from repro.imc.hierarchy import IMCHierarchy, build_hierarchy
@@ -35,6 +48,12 @@ class SystemResult:
     t_write_op: float = 0.0
     write_attempts: float = 1.0
     write_residual_ber: float = 0.0
+    # refresh/scrub provenance (0.0 / inf when no RefreshPolicy is active):
+    # steady-state scrub time folded into t_imc, scrub energy folded into
+    # e_imc, and the policy interval that produced them.
+    t_refresh: float = 0.0
+    e_refresh: float = 0.0
+    refresh_interval: float = math.inf
 
     @property
     def speedup(self) -> float:
@@ -46,7 +65,8 @@ class SystemResult:
 
 
 def evaluate_workload(
-    w: Workload, hier: IMCHierarchy, cpu: CPUModel = CORTEX_A72
+    w: Workload, hier: IMCHierarchy, cpu: CPUModel = CORTEX_A72,
+    refresh: Optional["RefreshPolicy"] = None,
 ) -> SystemResult:
     t_cpu, e_cpu = cpu.kernel_time_energy(
         w.n_elems,
@@ -80,25 +100,56 @@ def evaluate_workload(
     e_periph = n_row_ops * level.spec.e_periph_row_op
     e_imc = e_cells + e_periph
 
+    # --- refresh/scrub overhead (DESIGN.md §10) ----------------------------
+    # Every `interval` the scrub controller reads + rewrites each resident
+    # data row.  Steady state: scrubbing steals a `duty` fraction of row-op
+    # bandwidth, stretching the workload by duty/(1-duty); scrub energy is
+    # one full read+write pass per interval over the footprint.
+    t_refresh = e_refresh = 0.0
+    interval = math.inf
+    if refresh is not None and math.isfinite(refresh.interval):
+        interval = refresh.interval
+        data_rows = max(1.0, w.footprint_bytes * 8.0 / level.row_bits)
+        duty = min(data_rows * (tm.t_read + tm.t_write) / interval, 0.95)
+        t_refresh = t_imc * duty / (1.0 - duty)
+        t_imc = t_imc + t_refresh
+        bits = data_rows * level.row_bits
+        e_pass = (bits * (tm.e_read_bit + tm.e_write_bit)
+                  + 2.0 * data_rows * level.spec.e_periph_row_op)
+        e_refresh = (t_imc / interval) * e_pass
+        e_imc = e_imc + e_refresh
+
     return SystemResult(w.name, t_cpu, e_cpu, t_imc, e_imc,
                         t_write_op=tm.t_write,
                         write_attempts=tm.write_attempts,
-                        write_residual_ber=tm.write_residual_ber)
+                        write_residual_ber=tm.write_residual_ber,
+                        t_refresh=t_refresh, e_refresh=e_refresh,
+                        refresh_interval=interval)
 
 
 def evaluate_system(kind: str = "afmtj", v_write: float = 1.0,
                     wer_target: float | None = None,
                     write_percentile: float | None = None,
+                    read_percentile: float | None = None,
+                    offset_sigma: float = 0.0,
+                    refresh: Optional["RefreshPolicy"] = None,
                     ) -> Dict[str, SystemResult]:
     """``wer_target`` (e.g. 1e-2) sizes write pulses from the thermal-tail
     Monte-Carlo campaign instead of the mean switching time;
     ``write_percentile`` (e.g. 99.0) replaces the single-pulse write stage
     time with the measured write-verify retry distribution's row time at
     that percentile (``imc.write_path``) — with MTJs the retry-inflated
-    write stage dominates the pipe even harder than the nominal pulse."""
+    write stage dominates the pipe even harder than the nominal pulse.
+    ``read_percentile``/``offset_sigma`` do the same for the read side
+    (``imc.read_path``, DESIGN.md §10), and ``refresh`` charges a measured
+    retention/disturb-derived scrub policy into the comparison.  All
+    defaults off keeps the nominal Fig. 4 numbers bit-for-bit."""
     hier = build_hierarchy(kind, v_write=v_write, wer_target=wer_target,
-                           write_percentile=write_percentile)
-    return {name: evaluate_workload(w, hier) for name, w in WORKLOADS.items()}
+                           write_percentile=write_percentile,
+                           read_percentile=read_percentile,
+                           offset_sigma=offset_sigma)
+    return {name: evaluate_workload(w, hier, refresh=refresh)
+            for name, w in WORKLOADS.items()}
 
 
 def summarize(results: Dict[str, SystemResult]):

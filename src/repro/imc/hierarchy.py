@@ -17,6 +17,7 @@ import dataclasses
 from typing import Dict, Literal
 
 from repro.circuit.bitline import BitlineParams
+from repro.circuit.senseamp import SenseAmpParams
 from repro.circuit.subarray import SubarrayTimings, make_subarray
 
 
@@ -68,21 +69,30 @@ def build_hierarchy(
     v_write: float = 1.0,
     wer_target: float | None = None,
     write_percentile: float | None = None,
+    read_percentile: float | None = None,
+    offset_sigma: float = 0.0,
 ) -> IMCHierarchy:
     """``wer_target`` switches write-pulse sizing from the mean switching
     time to a thermal-tail (Monte-Carlo campaign) margin — see
     ``imc.write_margin``.  ``write_percentile`` (e.g. 99.0) goes further:
     per-level write timings are *measured* from the write-verify retry
     scheduler (``imc.write_path``, DESIGN.md §7) at that row-time
-    percentile.  None/None keeps the seed deterministic timing."""
+    percentile.  ``read_percentile`` does the same for the read side
+    (``imc.read_path``, DESIGN.md §10): per-level sense times come from the
+    worst process corner's (D2D x SA-offset) Monte-Carlo at that percentile,
+    with ``offset_sigma`` [V] setting the sense-amp input-referred offset
+    spread.  None/None keeps the seed deterministic timing."""
     levels = {}
+    sa = SenseAmpParams(offset_sigma=offset_sigma)
     for spec in LEVELS:
         bl = BitlineParams(
             c_per_cell=0.03e-15 * spec.c_per_cell_scale,
             rows=spec.rows,
         )
         sub = make_subarray(kind, rows=spec.rows, cols=spec.cols,
-                            v_write=v_write, bl=bl, wer_target=wer_target,
-                            write_percentile=write_percentile)
+                            v_write=v_write, bl=bl, sa=sa,
+                            wer_target=wer_target,
+                            write_percentile=write_percentile,
+                            read_percentile=read_percentile)
         levels[spec.name] = IMCLevel(spec=spec, timings=sub.timings)
     return IMCHierarchy(kind=kind, levels=levels)

@@ -16,8 +16,10 @@ def settings(**_kw):
 def given(**_kw):
     def deco(f):
         def skipper():
-            pytest.skip("hypothesis not installed "
-                        "(pip install -r requirements-dev.txt)")
+            pytest.skip("hypothesis not installed — optional dev dep, "
+                        "pip install -r requirements-dev.txt; the pinned "
+                        "companion tests cover the same invariants "
+                        "deterministically (ROADMAP.md, test hygiene)")
 
         skipper.__name__ = f.__name__
         return skipper

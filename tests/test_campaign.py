@@ -68,7 +68,11 @@ def test_thermal_zero_sigma_reduces_to_deterministic():
     out_t = ops.llg_rk4_thermal(state, noise.cell_seeds(0, 512),
                                 AFMTJ_PARAMS, 0.1e-12, 100, 0.0)
     out_d = ops.llg_rk4(state, AFMTJ_PARAMS, 0.1e-12, 100)
-    np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_d))
+    # the thermal kernel adds an exact 0.0 field, but XLA fuses the add
+    # differently than the deterministic kernel — rounding can differ by
+    # a ulp per step, so pin to a few f32 ulps rather than bit equality
+    np.testing.assert_allclose(np.asarray(out_t), np.asarray(out_d),
+                               rtol=0, atol=5e-7)
 
 
 def test_thermal_seeds_decorrelate_lanes():

@@ -32,6 +32,18 @@ def test_design_citations_resolve():
     assert not dangling, f"dangling DESIGN.md § citations: {dangling}"
 
 
+def test_design_documents_read_path():
+    """DESIGN.md §10 is the read-path/refresh contract `imc.read_path`,
+    `circuit.senseamp` (MC mode) and `imc.evaluate` (refresh charging) all
+    cite — it must exist and actually cover the three scenario families."""
+    text = (ROOT / "DESIGN.md").read_text()
+    m = re.search(r"^## §10\b.*?(?=^## §|\Z)", text, re.M | re.S)
+    assert m, "DESIGN.md §10 (read path) missing"
+    body = m.group(0).lower()
+    for topic in ("disturb", "retention", "sense", "refresh"):
+        assert topic in body, f"DESIGN.md §10 does not cover {topic!r}"
+
+
 def test_readme_lists_every_example():
     readme = (ROOT / "README.md").read_text()
     missing = [p.name for p in sorted((ROOT / "examples").glob("*.py"))

@@ -170,4 +170,6 @@ def test_resolve_pspec_uneven_drops_axis():
     from repro.launch.sharding import resolve_pspec
 
     if jax.device_count() < 2:
-        pytest.skip("needs >=2 devices (covered by dry-run)")
+        pytest.skip("needs >=2 devices — uneven-shard axis dropping is a "
+                    "multi-device property; the TPU dry-run workflow "
+                    "(ROADMAP.md) exercises it on real meshes")
