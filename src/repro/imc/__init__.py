@@ -17,15 +17,17 @@
               through the fused campaign engine, measured read timings and
               the retention+disturb-derived refresh policy (DESIGN.md §10)
 """
-from repro.imc.hierarchy import IMCHierarchy, build_hierarchy  # noqa: F401
 from repro.imc.cpu_model import CPUModel, CORTEX_A72  # noqa: F401
 from repro.imc.workloads import WORKLOADS, Workload  # noqa: F401
-from repro.imc.evaluate import evaluate_system, SystemResult  # noqa: F401
-from repro.imc.write_margin import wer_margined_pulse  # noqa: F401
 
-# analog_pipeline / write_path re-exports are lazy (PEP 562): they pull the
-# campaign engine, shard_map + Pallas, which closed-form consumers
-# (evaluate/mapping/fig4) must not pay for at package-import time.
+# Everything touching the circuit stack re-exports lazily (PEP 562): the
+# hierarchy/evaluate chain imports JAX and the campaign engine pulls
+# shard_map + Pallas — costs that JAX-free consumers (the serving
+# scheduler/traffic/simulator stack, ``imc.cost_model`` at import time)
+# must not pay at package-import time.
+_HIERARCHY_EXPORTS = ("IMCHierarchy", "build_hierarchy")
+_EVALUATE_EXPORTS = ("evaluate_system", "SystemResult")
+_WRITE_MARGIN_EXPORTS = ("wer_margined_pulse",)
 _ANALOG_EXPORTS = ("AnalogConfig", "AccuracyReport", "ProgrammedArray",
                    "analog_matmul", "binary_matmul", "mvm_accuracy",
                    "program_weights", "kernel_operands")
@@ -44,6 +46,18 @@ _READ_PATH_EXPORTS = ("ReadDisturbResult", "DisturbModel", "RetentionResult",
 
 
 def __getattr__(name):
+    if name in _HIERARCHY_EXPORTS:
+        from repro.imc import hierarchy
+
+        return getattr(hierarchy, name)
+    if name in _EVALUATE_EXPORTS:
+        from repro.imc import evaluate
+
+        return getattr(evaluate, name)
+    if name in _WRITE_MARGIN_EXPORTS:
+        from repro.imc import write_margin
+
+        return getattr(write_margin, name)
     if name in _ANALOG_EXPORTS:
         from repro.imc import analog_pipeline
 

@@ -153,8 +153,23 @@ def evaluate_system(kind: str = "afmtj", v_write: float = 1.0,
 
 
 def summarize(results: Dict[str, SystemResult]):
+    """Arithmetic-mean (speedup, energy_saving) across workloads — the
+    paper's headline aggregation; dominated by the largest ratios."""
     import statistics
 
     sp = statistics.mean(r.speedup for r in results.values())
     es = statistics.mean(r.energy_saving for r in results.values())
+    return sp, es
+
+
+def summarize_geomean(results: Dict[str, SystemResult]):
+    """Geometric-mean (speedup, energy_saving) across workloads.
+
+    The standard aggregation for ratios (SPEC-style): symmetric under
+    inversion and not dominated by a single large-speedup workload, which
+    the arithmetic ``summarize`` is.  Both are reported side by side."""
+    import statistics
+
+    sp = statistics.geometric_mean(r.speedup for r in results.values())
+    es = statistics.geometric_mean(r.energy_saving for r in results.values())
     return sp, es

@@ -1,0 +1,144 @@
+"""Serving engines: model execution behind a counts-reporting interface.
+
+``ServeEngine`` owns everything JAX about serving (DESIGN.md §11): params,
+the jitted fixed-window prefill and single-token decode, the KV cache, and
+per-request frontend conditioning.  Each call returns the batch's next
+tokens (numpy) **plus** the step's op counts (``imc.cost_model.StepCounts``)
+so the serve loop can run on a simulated device clock instead of wall time.
+
+``StubEngine`` mirrors the same interface with a deterministic token
+function and the same analytic op counts, importing no JAX — it is what the
+scheduler edge-case tests and the step-granular serving simulator drive.
+
+JAX is imported lazily (inside ``ServeEngine``) so importing this module —
+and everything the scheduler/traffic/simulator stack needs — stays JAX-free.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.imc.cost_model import (StepCounts, TokenCounts, decode_step_counts,
+                                  per_token_counts, prefill_step_counts)
+
+PAD_ID = 0
+
+
+class ServeEngine:
+    """Jitted prefill + decode over a fixed token window.
+
+    The window (``prompt_len + max_new``) is fixed so the re-prefill of
+    continuous batching compiles once; histories are right-aligned into it
+    (the recompute-on-join policy — the decode cache keeps a single shared
+    position scalar, see ``launch.scheduler``)."""
+
+    def __init__(self, cfg, prompt_len: int, max_new: int, batch: int,
+                 seed: int = 0):
+        import jax
+
+        from repro.models import model as M
+
+        self.cfg = cfg
+        self.batch = batch
+        self.window = prompt_len + max_new
+        self.max_seq = self.window + cfg.frontend_positions + max_new + 2
+        self.token_counts: TokenCounts = per_token_counts(cfg)
+        self.frontend_key = ("encoder_frames" if cfg.n_encoder_layers else
+                             "frontend_embeds" if cfg.frontend_positions
+                             else None)
+        self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(
+            lambda p, b: M.serve_prefill(p, cfg, b, max_seq=self.max_seq))
+        self._decode = jax.jit(
+            lambda p, c, t: M.serve_step(p, cfg, c, t))
+        self._cache = None
+        self._jnp = __import__("jax.numpy", fromlist=["numpy"])
+
+    def draw_frontend(self, rng: np.random.Generator):
+        """One request's frontend conditioning — drawn once at admission and
+        kept for the request's whole lifetime (re-prefills must not change
+        the 'image' a sequence is conditioned on)."""
+        if self.frontend_key is None:
+            return None
+        return rng.standard_normal(
+            (self.cfg.frontend_positions, self.cfg.d_model)).astype(np.float32)
+
+    def prefill(self, histories: Sequence[np.ndarray],
+                frontends: Sequence[Any]) -> Tuple[np.ndarray, StepCounts]:
+        """Re-prefill the whole batch from right-aligned histories; returns
+        (next token per slot, op counts over the live histories)."""
+        jnp = self._jnp
+        hist = np.full((self.batch, self.window), PAD_ID, np.int32)
+        for s, h in enumerate(histories):
+            h = np.asarray(h)[-self.window:]
+            if h.size:
+                hist[s, self.window - h.size:] = h     # right-aligned
+        batch = {"tokens": jnp.asarray(hist)}
+        if self.frontend_key:
+            batch[self.frontend_key] = jnp.asarray(np.stack([
+                f if f is not None else
+                np.zeros((self.cfg.frontend_positions, self.cfg.d_model),
+                         np.float32)
+                for f in frontends]))
+        logits, self._cache = self._prefill(self.params, batch)
+        tok = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        counts = prefill_step_counts(
+            self.token_counts,
+            [min(len(np.asarray(h)), self.window)
+             for h in histories if len(np.asarray(h))])
+        return tok, counts
+
+    def decode_step(self, tokens: np.ndarray,
+                    slot_positions: Sequence[int]
+                    ) -> Tuple[np.ndarray, StepCounts]:
+        """One decode step from the cached state; ``slot_positions`` are the
+        per-slot history lengths (0 = idle slot) for attention-span op
+        counting only — dead slots ride the batch compute for free."""
+        jnp = self._jnp
+        tok = jnp.asarray(np.asarray(tokens, np.int32))[:, None]
+        logits, self._cache = self._decode(self.params, self._cache, tok)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        return nxt, decode_step_counts(self.token_counts,
+                                       [p for p in slot_positions if p > 0])
+
+
+class StubEngine:
+    """Engine-shaped deterministic token source (no JAX anywhere).
+
+    ``token_fn(slot, hist_len) -> int`` decides the next token from the
+    slot index and the slot's current history length (default: a cheap
+    deterministic hash, always positive).  Op counts use the same analytic
+    formulas as the real engine, so a scheduler loop driven by a stub
+    prices identically to one driven by a model."""
+
+    def __init__(self, token_counts: Optional[TokenCounts] = None,
+                 token_fn: Optional[Callable[[int, int], int]] = None,
+                 window: Optional[int] = None):
+        self.token_counts = token_counts or TokenCounts(1.0, 1.0)
+        self.token_fn = token_fn or (lambda s, n: (7 * n + s) % 97 + 1)
+        self.window = window
+
+    def draw_frontend(self, rng) -> None:
+        return None
+
+    def _clip(self, n: int) -> int:
+        return min(n, self.window) if self.window else n
+
+    def prefill(self, histories: Sequence[np.ndarray],
+                frontends: Sequence[Any]) -> Tuple[np.ndarray, StepCounts]:
+        toks = np.array([self.token_fn(s, len(np.asarray(h)))
+                         for s, h in enumerate(histories)], np.int32)
+        counts = prefill_step_counts(
+            self.token_counts,
+            [self._clip(len(np.asarray(h)))
+             for h in histories if len(np.asarray(h))])
+        return toks, counts
+
+    def decode_step(self, tokens: np.ndarray,
+                    slot_positions: Sequence[int]
+                    ) -> Tuple[np.ndarray, StepCounts]:
+        toks = np.array([self.token_fn(s, int(p))
+                         for s, p in enumerate(slot_positions)], np.int32)
+        return toks, decode_step_counts(self.token_counts,
+                                        [p for p in slot_positions if p > 0])

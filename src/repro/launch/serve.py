@@ -1,37 +1,40 @@
-"""Serving driver: batched prefill + decode with continuous batching.
+"""Serving driver: wiring for the engine / scheduler / cost-model stack.
 
 ``python -m repro.launch.serve --arch qwen2-0.5b --requests 16``
 
-A minimal production-shaped server loop with true slot-freeing: a request
-queue feeds a fixed number of decode *slots*; a sequence finishes on EOS
-(``--eos-id``) or ``--max-new``, frees its slot, and the next queued request
-joins at the following step boundary.  Joins use prefill-on-join continuous
-batching: every slot's token history (right-aligned into a fixed
-``prompt_len + max_new`` window, so the prefill compiles once) is re-prefilled
-as one batch, then decoding resumes — the recompute-on-join variant of
-continuous batching, chosen because the decode cache keeps a single shared
-position scalar.  Decode tokens are counted only for live slots; finished
-sequences cost nothing.
+This module is deliberately thin (DESIGN.md §11): it parses arguments and
+wires together the serving subsystem's layers —
 
-On this container it runs the reduced (smoke) configs; the same code path
-lowers at the production mesh in the dry-run (prefill_32k / decode_32k /
-long_500k cells).  ``main`` returns a stats dict (served counts, per-request
-completions, token totals) so the smoke test can pin the accounting.
+* ``launch.engine.ServeEngine`` — params, jitted fixed-window prefill +
+  single-token decode, KV cache; returns next tokens plus per-step op counts,
+* ``launch.scheduler.ContinuousBatchScheduler`` — slots, queue, FIFO
+  admission with the prefill-on-join recompute policy, token accounting,
+* ``imc.cost_model.DeviceCostModel`` — prices every step's op counts in
+  simulated AFMTJ / MTJ / CPU time and energy, replacing wall-clock as the
+  serving clock.
+
+Every step the real model executes is charged to each requested technology's
+simulated clock, so one smoke-sized run yields per-technology TTFT/TPOT
+percentiles alongside the functional token accounting.  For million-request
+load studies use ``launch.simulate`` (pure cost-model fast path — no model
+forwards); this driver is the fidelity anchor that runs actual forwards.
+
+``main`` returns a stats dict: the scheduler's accounting (served counts,
+prefill/decode token split, per-request completions) plus a ``device`` map
+of per-technology simulated-clock reports.
 """
 from __future__ import annotations
 
 import argparse
-import collections
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import smoke_config
-from repro.models import model as M
-
-PAD_ID = 0
+from repro.imc.cost_model import TECHNOLOGIES, device_cost_model
+from repro.launch.engine import ServeEngine
+from repro.launch.report import build_report
+from repro.launch.scheduler import ContinuousBatchScheduler, Request
 
 
 def main(argv=None):
@@ -43,102 +46,76 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="token id that finishes a sequence (-1: disabled)")
+    ap.add_argument("--technologies", default=",".join(TECHNOLOGIES),
+                    help="comma list of device clocks to charge "
+                         f"(default: {','.join(TECHNOLOGIES)})")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch)
-    window = args.prompt_len + args.max_new          # fixed prefill width
-    max_seq = window + cfg.frontend_positions + args.max_new + 2
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-
+    engine = ServeEngine(cfg, args.prompt_len, args.max_new, args.batch)
+    sched = ContinuousBatchScheduler(args.batch, args.max_new,
+                                     eos_id=args.eos_id)
     rng = np.random.default_rng(0)
-    frontend_key = ("encoder_frames" if cfg.n_encoder_layers else
-                    "frontend_embeds" if cfg.frontend_positions else None)
+    for rid in range(args.requests):
+        sched.submit(Request(
+            rid=rid,
+            prompt=rng.integers(1, cfg.vocab, args.prompt_len).astype(
+                np.int32),
+            frontend=engine.draw_frontend(rng)))
 
-    def draw_frontend():
-        """One request's frontend conditioning — drawn once at admission and
-        kept for the request's whole lifetime (re-prefills must not change
-        the 'image' a sequence is conditioned on)."""
-        return rng.standard_normal(
-            (cfg.frontend_positions, cfg.d_model)).astype(np.float32)
+    techs = [t for t in args.technologies.split(",") if t]
+    models = {t: device_cost_model(t) for t in techs}
+    clock = {t: 0.0 for t in techs}
+    energy = {t: 0.0 for t in techs}
+    ttft = {t: np.full(args.requests, np.nan) for t in techs}
+    finish = {t: np.full(args.requests, np.nan) for t in techs}
 
-    prefill = jax.jit(lambda p, b: M.serve_prefill(p, cfg, b, max_seq=max_seq))
-    decode = jax.jit(lambda p, c, t: M.serve_step(p, cfg, c, t))
+    def charge(counts):
+        for t, m in models.items():
+            c = m.step_cost(counts)
+            clock[t] += c.t
+            energy[t] += c.e
 
-    # --- request queue + slot state ----------------------------------------
-    queue = collections.deque(
-        (rid, rng.integers(1, cfg.vocab, args.prompt_len).astype(np.int32))
-        for rid in range(args.requests))
-    slot_req = [None] * args.batch       # request id per slot (None = idle)
-    slot_hist = [np.zeros(0, np.int32)] * args.batch   # prompt + generated
-    slot_gen = [0] * args.batch          # generated-token count per slot
-    slot_front = [None] * args.batch     # per-request frontend conditioning
-    completions = {}                     # rid -> list of generated tokens
-
-    def admit_and_prefill():
-        """Fill idle slots from the queue and (re)prefill the whole batch."""
-        for s in range(args.batch):
-            if slot_req[s] is None and queue:
-                rid, prompt = queue.popleft()
-                slot_req[s], slot_hist[s], slot_gen[s] = rid, prompt, 0
-                if frontend_key:
-                    slot_front[s] = draw_frontend()
-        hist = np.full((args.batch, window), PAD_ID, np.int32)
-        for s in range(args.batch):
-            h = slot_hist[s][-window:]
-            if h.size:
-                hist[s, window - h.size:] = h     # right-aligned
-        batch = {"tokens": jnp.asarray(hist)}
-        if frontend_key:
-            batch[frontend_key] = jnp.asarray(np.stack([
-                f if f is not None else
-                np.zeros((cfg.frontend_positions, cfg.d_model), np.float32)
-                for f in slot_front]))
-        logits, cache = prefill(params, batch)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return cache, tok
-
-    served = 0
-    total_tokens = 0
-    prefills = 0
     t0 = time.time()
-    while served < args.requests:
-        cache, tok = admit_and_prefill()
-        prefills += 1
-        # decode until a slot frees with work still queued (then re-join),
-        # or until every live slot finishes (drain)
+    while not sched.finished:
+        sched.admit()
+        tok, counts = engine.prefill(sched.histories(), sched.frontends())
+        charge(counts)
         while True:
-            freed = False
-            tok_np = np.asarray(tok)
-            for s in range(args.batch):
-                if slot_req[s] is None:
-                    continue                      # dead slot: not counted
-                t = int(tok_np[s])
-                slot_hist[s] = np.append(slot_hist[s], np.int32(t))
-                slot_gen[s] += 1
-                total_tokens += 1
-                done = (t == args.eos_id) or (slot_gen[s] >= args.max_new)
-                if done:
-                    completions[slot_req[s]] = (
-                        slot_hist[s][-slot_gen[s]:].tolist())
-                    slot_req[s] = None
-                    served += 1
-                    freed = True
-            if served >= args.requests or (freed and queue):
+            out = sched.commit(tok)
+            for t in techs:
+                for rid in out.first_tokens:
+                    ttft[t][rid] = clock[t]
+                for rid in out.finished:
+                    finish[t][rid] = clock[t]
+            if sched.finished or (out.freed and sched.has_waiting()):
                 break
-            logits, cache = decode(params, cache, tok[:, None])
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        print(f"served {served}/{args.requests} requests "
-              f"({total_tokens} decode tokens, {prefills} prefill waves)")
+            tok, counts = engine.decode_step(tok, sched.slot_positions())
+            charge(counts)
+        print(f"served {sched.served}/{args.requests} requests "
+              f"({sched.prefill_tokens} prefill + {sched.decode_tokens} "
+              f"decode tokens, {sched.waves} prefill waves)")
     dt = time.time() - t0
-    print(f"throughput: {total_tokens/dt:.1f} decode tok/s "
-          f"(smoke config on CPU; production numbers come from the dry-run)")
-    return {
-        "served": served,
-        "decode_tokens": total_tokens,
-        "prefills": prefills,
-        "completions": [completions[r] for r in sorted(completions)],
-        "elapsed_s": dt,
-    }
+
+    stats = sched.stats()
+    stats["elapsed_s"] = dt
+    olen = np.array([len(c) for c in stats["completions"]], np.float64)
+    stats["device"] = {}
+    for t in techs:
+        with np.errstate(invalid="ignore", divide="ignore"):
+            tpot = np.where(olen > 1.0,
+                            (finish[t] - ttft[t]) / np.maximum(olen - 1.0, 1.0),
+                            np.nan)
+        rep = build_report(t, ttft[t], tpot, clock[t], energy[t],
+                           stats["prefill_tokens"], stats["decode_tokens"])
+        stats["device"][t] = rep.row_dict()
+        print(f"[{t}] simulated {clock[t]:.3e} s, {energy[t]:.3e} J, "
+              f"p99 TTFT {rep.ttft_p99_s:.3e} s, "
+              f"p99 TPOT {rep.tpot_p99_s:.3e} s")
+    if stats["generated_tokens"] and dt > 0:
+        print(f"wall throughput: {stats['generated_tokens']/dt:.1f} tok/s "
+              f"(smoke config on CPU; device numbers above are simulated)")
+    return stats
 
 
 if __name__ == "__main__":

@@ -60,9 +60,18 @@ def test_serve_driver():
     stats = main(["--arch", "qwen2-0.5b", "--requests", "5", "--batch", "2",
                   "--prompt-len", "16", "--max-new", "4"])
     assert stats["served"] == 5
-    assert stats["decode_tokens"] == 5 * 4       # not rounded up to batches
+    # each request's FIRST token comes out of the prefill wave; the rest are
+    # decode steps — the split must be exact, not rounded up to batches
+    assert stats["prefill_tokens"] == 5
+    assert stats["decode_tokens"] == 5 * 4 - 5
+    assert stats["generated_tokens"] == 5 * 4
     assert stats["prefills"] >= 3                # joins actually happened
     assert [len(c) for c in stats["completions"]] == [4] * 5
+    # every requested technology got a simulated-clock report
+    for tech in ("afmtj", "mtj", "cpu"):
+        rep = stats["device"][tech]
+        assert rep["sim_time_s"] > 0 and rep["energy_j"] > 0
+        assert rep["ttft_p99_s"] >= rep["ttft_p50_s"] > 0
 
 
 def test_serve_honors_eos():
