@@ -1,0 +1,65 @@
+"""Model-level analog accuracy study: whole transformer forwards routed
+through the differential AFMTJ MVM (DESIGN.md §12).
+
+Where ``examples/analog_accuracy.py`` scores ONE decode projection, this
+study intercepts EVERY linear layer of real (smoke-sized) architectures —
+QKV/output projections, the FFN triple, the unembedding — and runs the full
+forward on the analog path, so quantization error, IR-drop attenuation and
+write faults *compound through depth* the way they would in a deployed
+accelerator.  Per surface point the table reports logits KL(ref || analog),
+greedy token-match rate and next-token perplexity vs the exact f32 forward,
+across adc_bits x TMR x process corner x residual write BER.
+
+Two analog modes ride the same interception hook:
+
+  fake — the fused fake-analog Pallas kernel (program -> IR drop -> ADC in
+         one traced pass; >= 10x faster than the device loop, parity pinned
+         in tests/test_analog_pipeline.py) — used for the sweep.
+  bnn  — every linear through the XNOR popcount path: the 1-bit floor.
+
+    PYTHONPATH=src python examples/model_accuracy_study.py
+"""
+from repro.imc.analog_pipeline import AnalogConfig
+from repro.imc.model_analog import model_accuracy, model_accuracy_surface
+
+SWEEP_ARCHS = ("qwen2-0.5b", "gemma2-2b")   # smoke-sized, real block wiring
+ADC_BITS = (4, 6, 8)
+TMRS = (0.8, 5.0)          # validated ~80% and the theoretical-limit regime
+CORNERS = ("tt", "ss")     # nominal + slow systematic process corner
+WRITE_BERS = (0.0, 1e-2)   # perfect programming vs 1% residual write faults
+BATCH, SEQ_LEN = 2, 64
+
+
+def _row(label, r):
+    print(f"  {label:>8} {r.tmr:5.1f} {r.corner:>6} {r.write_ber:8.0e} "
+          f"{r.kl:9.4f} {r.token_match:7.3f} {r.ppl_analog:9.1f}")
+
+
+def main():
+    print("=== Model-level analog accuracy: full forwards through the "
+          "AFMTJ MVM ===\n")
+    for arch in SWEEP_ARCHS:
+        print(f"--- {arch} (smoke config, batch={BATCH}, seq={SEQ_LEN})")
+        print(f"  {'adc_bits':>8} {'tmr':>5} {'corner':>6} {'w_ber':>8} "
+              f"{'kl':>9} {'match':>7} {'ppl':>9}")
+        surf = model_accuracy_surface(
+            arch, adc_bits=ADC_BITS, tmrs=TMRS, corners=CORNERS,
+            write_bers=WRITE_BERS, batch=BATCH, seq_len=SEQ_LEN)
+        for r in surf:
+            _row(str(r.adc_bits), r)
+        print(f"  (ppl_ref {surf[0].ppl_ref:.1f})")
+        bnn = model_accuracy(arch, AnalogConfig(), mode="bnn",
+                             batch=BATCH, seq_len=SEQ_LEN)
+        _row("bnn(1b)", bnn)
+        print()
+    print("reading the surface: KL falls monotonically with adc_bits (the"
+          "\ntests/test_model_analog.py golden pin); higher TMR widens the"
+          "\nconductance span so the same ADC step costs less; the ss corner"
+          "\nshifts every cell systematically and the shared decode gain"
+          "\nabsorbs most of it; write faults dominate once BER ~ 1e-2."
+          "\nThe bnn row is the 1-bit floor — depth compounds what a single"
+          "\nprojection sweep (examples/analog_accuracy.py) understates.")
+
+
+if __name__ == "__main__":
+    main()

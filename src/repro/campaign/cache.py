@@ -51,33 +51,36 @@ DEFAULT_CACHE_DIR = os.environ.get(
                                          ".cache", "repro-campaigns"))
 
 
-def campaign_key(p: DeviceParams, grid, backend: str) -> str:
-    """Content hash of everything the crossing-time tensor depends on."""
-    payload = {
-        "v": KERNEL_VERSION,
-        "layout": CELLS_LAYOUT,
-        "params": dataclasses.asdict(p),
-        "grid": dataclasses.asdict(grid),
-        "backend": backend,
-    }
+# ---------------------------------------------------------------- generic
+# Content-keyed named-array store — the campaign crossing-time cache below
+# and the analog weight-programming cache (``imc.model_analog``) are both
+# thin layers over these three primitives.
+
+def content_key(payload: dict) -> str:
+    """sha256 content key of a json-able payload (sorted keys, so dict
+    insertion order never leaks into the key)."""
     blob = json.dumps(payload, sort_keys=True, default=float)
     return hashlib.sha256(blob.encode()).hexdigest()[:32]
 
 
-def load(key: str, cache_dir: Optional[str] = None) -> Optional[np.ndarray]:
-    """Cached (n_T, n_V, n_S) crossing-time tensor, or None on miss."""
+def load_arrays(key: str, cache_dir: Optional[str] = None
+                ) -> Optional[dict]:
+    """All named arrays of a cached entry (header excluded), or None on
+    miss.  Corrupt / torn / stale-format files are misses, never errors."""
     path = Path(cache_dir or DEFAULT_CACHE_DIR) / f"{key}.npz"
     if not path.exists():
         return None
     try:
         with np.load(path) as z:
-            return z["crossing_time"]
+            return {k: z[k] for k in z.files if k != "header"}
     except (OSError, KeyError, ValueError):
         return None                      # corrupt entry == miss
 
 
-def store(key: str, crossing_time: np.ndarray, header: dict,
-          cache_dir: Optional[str] = None) -> Path:
+def store_arrays(key: str, arrays: dict, header: dict,
+                 cache_dir: Optional[str] = None) -> Path:
+    """Atomically persist named arrays + a json header under ``key``."""
+    assert "header" not in arrays, "reserved entry name"
     d = Path(cache_dir or DEFAULT_CACHE_DIR)
     d.mkdir(parents=True, exist_ok=True)
     final = d / f"{key}.npz"
@@ -85,7 +88,7 @@ def store(key: str, crossing_time: np.ndarray, header: dict,
     try:
         with os.fdopen(fd, "wb") as f:
             np.savez_compressed(
-                f, crossing_time=crossing_time,
+                f, **arrays,
                 header=np.frombuffer(
                     json.dumps(header, default=float).encode(), dtype=np.uint8),
             )
@@ -94,3 +97,29 @@ def store(key: str, crossing_time: np.ndarray, header: dict,
         if os.path.exists(tmp):
             os.unlink(tmp)
     return final
+
+
+# --------------------------------------------------------------- campaigns
+def campaign_key(p: DeviceParams, grid, backend: str) -> str:
+    """Content hash of everything the crossing-time tensor depends on."""
+    return content_key({
+        "v": KERNEL_VERSION,
+        "layout": CELLS_LAYOUT,
+        "params": dataclasses.asdict(p),
+        "grid": dataclasses.asdict(grid),
+        "backend": backend,
+    })
+
+
+def load(key: str, cache_dir: Optional[str] = None) -> Optional[np.ndarray]:
+    """Cached (n_T, n_V, n_S) crossing-time tensor, or None on miss."""
+    arrays = load_arrays(key, cache_dir)
+    if arrays is None or "crossing_time" not in arrays:
+        return None
+    return arrays["crossing_time"]
+
+
+def store(key: str, crossing_time: np.ndarray, header: dict,
+          cache_dir: Optional[str] = None) -> Path:
+    return store_arrays(key, {"crossing_time": crossing_time}, header,
+                        cache_dir)

@@ -16,6 +16,10 @@
   read_path — read-disturb / retention / sense-margin scenario family
               through the fused campaign engine, measured read timings and
               the retention+disturb-derived refresh policy (DESIGN.md §10)
+  model_analog — model-level analog accuracy: whole transformer forwards
+              routed through the analog MVM via the linear-interception
+              hook, fused fake-analog fast path + weight-programming cache
+              (DESIGN.md §12)
 """
 from repro.imc.cpu_model import CPUModel, CORTEX_A72  # noqa: F401
 from repro.imc.workloads import WORKLOADS, Workload  # noqa: F401
@@ -35,6 +39,11 @@ _WRITE_PATH_EXPORTS = ("WritePolicy", "ArrayWriteResult", "MeasuredWrite",
                        "WriteSurface", "write_verify", "program_bits",
                        "measured_write_timings", "write_surface",
                        "nominal_pulse")
+_MODEL_ANALOG_EXPORTS = ("ModelAccuracyReport", "fake_analog_matmul",
+                         "program_weights_cached", "programming_key",
+                         "param_tree_hash", "model_forward_logits",
+                         "analog_model_logits", "model_accuracy",
+                         "model_accuracy_surface", "logit_metrics")
 _READ_PATH_EXPORTS = ("ReadDisturbResult", "DisturbModel", "RetentionResult",
                       "SenseYieldResult", "SizedRead", "MeasuredRead",
                       "RefreshPolicy", "read_disturb_campaign",
@@ -70,4 +79,8 @@ def __getattr__(name):
         from repro.imc import read_path
 
         return getattr(read_path, name)
+    if name in _MODEL_ANALOG_EXPORTS:
+        from repro.imc import model_analog
+
+        return getattr(model_analog, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

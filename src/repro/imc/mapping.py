@@ -162,14 +162,33 @@ def accuracy_surface(
     tmrs: Sequence[float] = (0.8, 5.0),
     g_sigma: float = 0.0,
     variation=None,
+    model: Optional[str] = None,
     **kw,
 ) -> Dict[Tuple[int, float], "AccuracyReport"]:
     """Accuracy-vs-``adc_bits``-vs-TMR surface for one arch: the functional
     companion of ``map_arch_decode``'s latency/energy point.  ``variation``
     (a single-corner ``core.params.VariationSpec``) is the D2D /
     process-corner knob; ``g_sigma`` is its deprecated conductance-only
-    alias (DESIGN.md §9)."""
+    alias (DESIGN.md §9).
+
+    ``model=`` switches from the single decode-projection score to the
+    *model-level* surface (``imc.model_analog``, DESIGN.md §12): every
+    linear of the arch's forward routed through the analog MVM, values are
+    ``ModelAccuracyReport`` (logits KL / token match / perplexity) instead
+    of ``AccuracyReport``.  Pass an execution mode — "fake" (fused Pallas
+    fast path), "device" (full programming chain) or "bnn" — and optionally
+    a single-corner ``variation`` spec for the systematic corner axis."""
     from repro.imc.analog_pipeline import AnalogConfig
+
+    if model is not None:
+        from repro.imc.model_analog import model_accuracy_surface
+
+        assert g_sigma == 0.0, "model-level surface takes corners, not g_sigma"
+        corner = variation.corners[0].name if variation is not None else "tt"
+        reports = model_accuracy_surface(
+            arch=cfg.name, kind=kind, mode=model, adc_bits=tuple(adc_bits),
+            tmrs=tuple(tmrs), corners=(corner,), **kw)
+        return {(r.adc_bits, r.tmr): r for r in reports}
 
     out = {}
     for bits in adc_bits:

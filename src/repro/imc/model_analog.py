@@ -1,0 +1,528 @@
+"""Model-level analog accuracy: whole transformer forwards through the
+AFMTJ differential-conductance MVM (DESIGN.md §12).
+
+PR 2's ``imc.analog_pipeline`` scores one decode projection at a time; the
+paper's case-study claim only matters if the analog path preserves accuracy
+at the *model* level.  This module routes **every linear layer** of a real
+architecture forward (``models/model.py``) through the analog MVM via the
+``models.common.linear`` interception hook, and measures logits KL,
+token-match rate, and task perplexity against the exact f32 forward across
+the (adc_bits x TMR x process corner x residual write BER) surface.
+
+Three execution modes per linear:
+
+  * ``fake``   — the fused fake-analog Pallas kernel
+                 (``kernels.fake_analog``): programming replayed inside the
+                 matmul tiles, everything traced, one compile per
+                 (shape, adc_bits); sweep axes (TMR, corner, BER, seed) are
+                 plain data.  This is the tractable surface path.
+  * ``device`` — the full ``program_weights`` + ``analog_matmul`` chain,
+                 host-synced and compile-keyed per ADC full scale; the
+                 ground truth the fake path is parity-pinned against, sped
+                 up by the content-keyed weight-programming cache below.
+  * ``bnn``    — the paper's 1-cell/weight XNOR mode
+                 (``analog_pipeline.binary_matmul``), fully traced.
+
+The forward here is *eagerly unrolled* over layers (stacked block params
+indexed per repeat) instead of ``lax.scan``: the device path reduces to
+Python floats during programming, which cannot live under a scan; the fake
+and bnn paths are traced end-to-end and jitted whole-forward, so the unroll
+costs only compile-time linear in depth at smoke sizes.
+
+Weight-programming cache: ``program_weights`` is content-keyed on
+(weight-array hash, programming-relevant AnalogConfig axes, corner, seed,
+bitline) through ``campaign.cache``'s named-array store — an ``adc_bits``
+or ``full_scale_sigmas`` sweep re-programs nothing, a TMR/corner/BER sweep
+re-programs only the axis that changed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.campaign import cache as _cache
+from repro.circuit.bitline import BitlineParams, cell_conductance, column_ir_drop
+from repro.configs.base import ArchConfig
+from repro.configs.registry import get_arch, smoke_config
+from repro.core.params import PROCESS_CORNERS, VariationSpec
+from repro.imc.analog_pipeline import (AnalogConfig, ProgrammedArray,
+                                       _device_for, _resolved_variation,
+                                       analog_matmul, binary_matmul,
+                                       program_weights)
+from repro.kernels.fake_analog import (ROW_ATT_NEG, ROW_ATT_POS, ROW_DECODE,
+                                       ROW_G_AP, ROW_G_FS, ROW_G_SCALE,
+                                       ROW_I_MAX, ROW_R_ACCESS, AUX_ROWS,
+                                       fake_analog_mac_pallas,
+                                       pos_neg_conductance)
+from repro.kernels.ops import _default_interpret
+from repro.models import model as model_mod
+from repro.models.common import intercept_linears, rms_norm
+
+# bumped when the programming chain changes numerically — stale cache
+# entries then simply never match (same policy as campaign KERNEL_VERSION)
+PROGRAMMING_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# fake-analog fast path (single projection)
+# ---------------------------------------------------------------------------
+def _round_2sig(v: jnp.ndarray) -> jnp.ndarray:
+    """Traceable equivalent of the device path's ``float(f"{v:.2g}")`` ADC
+    full-scale rounding (2 significant digits).  Decimal-vs-binary half-way
+    ties can differ in the last digit — parity tests pass an explicit
+    ``i_max`` where exactness matters."""
+    e = jnp.floor(jnp.log10(v))
+    p = 10.0 ** (e - 1.0)
+    return jnp.round(v / p) * p
+
+
+def _fake_mvm_body(x, w, bl: BitlineParams, scal: Dict[str, jnp.ndarray], *,
+                   adc_bits: int, apply_fet: bool, use_fail: bool,
+                   ir_drop: bool, has_imax: bool, decode: bool,
+                   interpret: bool):
+    """Traced fake-analog ``x @ w``: operand preamble + fused kernel.
+
+    Everything numeric mirrors ``program_weights`` / ``kernel_operands`` /
+    ``analog_matmul`` step for step, with host floats replaced by traced
+    scalars (``scal``) so the whole chain jits."""
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    k_rows, n_cols = w.shape
+    g_ap, g_fs = scal["g_ap"], scal["g_fs"]
+
+    w_scale = jnp.max(jnp.abs(w))
+    w_scale = jnp.where(w_scale == 0.0, 1.0, w_scale)
+    wn = w / w_scale
+
+    if use_fail:
+        # identical draw stream to program_weights' residual write errors
+        kber = jax.random.fold_in(jax.random.PRNGKey(scal["seed"]), 0x5EB)
+        kb1, kb2 = jax.random.split(kber)
+        fail = (jax.random.bernoulli(kb1, scal["ber"], wn.shape)
+                .astype(jnp.float32)
+                + 2.0 * jax.random.bernoulli(kb2, scal["ber"], wn.shape)
+                .astype(jnp.float32))
+    else:
+        fail = jnp.zeros_like(wn)
+
+    # column statistics (IR planes, ADC sizing) reduce over the same cell
+    # conductances the kernel replays — shared helper, fused reductions
+    tp, tn = pos_neg_conductance(wn, fail, g_ap, g_fs, scal["g_scale"],
+                                 scal["r_access"], apply_fet=apply_fet,
+                                 use_fail=use_fail)
+    if ir_drop:
+        att_p = column_ir_drop(jnp.sum(tp, axis=0), bl)
+        att_n = column_ir_drop(jnp.sum(tn, axis=0), bl)
+        att_mean = 0.5 * (jnp.mean(att_p) + jnp.mean(att_n))
+    else:
+        att_p = jnp.ones((n_cols,), jnp.float32)
+        att_n = jnp.ones((n_cols,), jnp.float32)
+        att_mean = jnp.float32(1.0)
+
+    x_scale = jnp.max(jnp.abs(x))
+    x_scale = jnp.where(x_scale == 0.0, 1.0, x_scale)
+    v = scal["v_read"] * x / x_scale
+
+    if has_imax:
+        i_max = scal["i_max"]
+    else:
+        g_diff = att_p[None, :] * tp - att_n[None, :] * tn
+        g_rms = jnp.sqrt(jnp.mean(g_diff * g_diff))
+        v_rms = jnp.sqrt(jnp.mean(v * v))
+        i_sigma = v_rms * g_rms * math.sqrt(k_rows)
+        i_max = _round_2sig(jnp.maximum(scal["fs_sigmas"] * i_sigma, 1e-30))
+    dec = ((x_scale * w_scale) / (scal["v_read"] * g_fs * att_mean)
+           if decode else jnp.float32(1.0))
+
+    full = functools.partial(jnp.full, (n_cols,), dtype=jnp.float32)
+    rows = [None] * AUX_ROWS
+    rows[ROW_ATT_POS], rows[ROW_ATT_NEG] = att_p, att_n
+    rows[ROW_I_MAX], rows[ROW_DECODE] = full(i_max), full(dec)
+    rows[ROW_G_AP], rows[ROW_G_FS] = full(g_ap), full(g_fs)
+    rows[ROW_G_SCALE], rows[ROW_R_ACCESS] = (full(scal["g_scale"]),
+                                             full(scal["r_access"]))
+    aux = jnp.stack(rows)
+    return fake_analog_mac_pallas(v, wn, fail, aux, adc_bits=adc_bits,
+                                  apply_fet=apply_fet, use_fail=use_fail,
+                                  interpret=interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_fake_mvm(adc_bits: int, apply_fet: bool, use_fail: bool,
+                     ir_drop: bool, has_imax: bool, decode: bool,
+                     interpret: bool):
+    body = functools.partial(_fake_mvm_body, adc_bits=adc_bits,
+                             apply_fet=apply_fet, use_fail=use_fail,
+                             ir_drop=ir_drop, has_imax=has_imax,
+                             decode=decode, interpret=interpret)
+    return jax.jit(body)
+
+
+def _systematic_g_scale(cfg: AnalogConfig) -> Tuple[bool, float]:
+    """(apply_fet, 1/r_factor) for the fake path — systematic corners only.
+    D2D spreads draw per-cell host-side factors (``spec.lane_factors``) the
+    fused kernel deliberately does not model; use mode="device" for those."""
+    spec = _resolved_variation(cfg)
+    if spec is None:
+        return False, 1.0
+    c = spec.corners[0]
+    if c.sigma_alpha or c.sigma_b_aniso or c.sigma_volume or c.sigma_r:
+        raise NotImplementedError(
+            "fake-analog path models systematic process corners only; "
+            "per-cell D2D spreads need the device path (mode='device')")
+    return True, 1.0 / c.r_factor
+
+
+def _fake_scalars(kind: str, cfg: AnalogConfig, bl: BitlineParams,
+                  g_scale: float, i_max: Optional[float]
+                  ) -> Dict[str, jnp.ndarray]:
+    """The traced-scalar pack: same f32 roundings as ``program_weights``."""
+    dev = _device_for(kind, cfg)
+    g_p_eff = float(cell_conductance(jnp.asarray(1.0 / dev.r_parallel), bl))
+    g_ap_eff = float(cell_conductance(jnp.asarray(1.0 / dev.r_antiparallel), bl))
+    return {
+        "g_ap": jnp.float32(g_ap_eff),
+        "g_fs": jnp.float32(g_p_eff - g_ap_eff),
+        "g_scale": jnp.float32(g_scale),
+        "r_access": jnp.float32(bl.r_access),
+        "v_read": jnp.float32(cfg.v_read),
+        "fs_sigmas": jnp.float32(cfg.full_scale_sigmas),
+        "ber": jnp.float32(cfg.write_ber),
+        "seed": jnp.int32(cfg.seed),
+        "i_max": jnp.float32(0.0 if i_max is None else i_max),
+    }
+
+
+def fake_analog_matmul(
+    w: jnp.ndarray,                  # (K, N) float weights
+    x: jnp.ndarray,                  # (M, K) activations (signed)
+    kind: str = "afmtj",
+    cfg: AnalogConfig = AnalogConfig(),
+    bl: Optional[BitlineParams] = None,
+    i_max: Optional[float] = None,   # explicit ADC full scale (parity pins)
+    decode: bool = True,             # False: raw quantized currents
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """``x @ w`` through the fused fake-analog kernel — the fast,
+    fully-traced equivalent of ``program_weights`` + ``analog_matmul``,
+    parity-pinned in ``tests/test_analog_pipeline.py``."""
+    assert w.ndim == 2 and x.ndim == 2 and x.shape[1] == w.shape[0], (
+        x.shape, w.shape)
+    bl = bl or BitlineParams(rows=w.shape[0])
+    apply_fet, g_scale = _systematic_g_scale(cfg)
+    scal = _fake_scalars(kind, cfg, bl, g_scale, i_max)
+    interp = _default_interpret() if interpret is None else interpret
+    fn = _jitted_fake_mvm(cfg.adc_bits, apply_fet, cfg.write_ber > 0.0,
+                          cfg.ir_drop, i_max is not None, decode, interp)
+    return fn(x, w, bl, scal)
+
+
+# ---------------------------------------------------------------------------
+# weight-programming cache (device path)
+# ---------------------------------------------------------------------------
+def _array_digest(a) -> str:
+    a = np.ascontiguousarray(np.asarray(a, np.float32))
+    h = hashlib.sha256(a.tobytes())
+    h.update(str(a.shape).encode())
+    return h.hexdigest()
+
+
+def param_tree_hash(tree: Any) -> str:
+    """Content hash of a parameter pytree, stable under dict-key insertion
+    order (leaves are keyed by their canonical tree path)."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    payload = sorted((jax.tree_util.keystr(path), _array_digest(leaf))
+                     for path, leaf in leaves)
+    return _cache.content_key({"params": payload})
+
+
+def programming_key(w, kind: str, cfg: AnalogConfig,
+                    bl: BitlineParams) -> str:
+    """Content key over the *programming-relevant* axes only: sweeping
+    ``adc_bits`` / ``full_scale_sigmas`` / ``v_read`` (pure read-out knobs)
+    hits the cache; TMR / corner / BER / seed / IR-drop re-program."""
+    spec = _resolved_variation(cfg)
+    return _cache.content_key({
+        "v": PROGRAMMING_VERSION,
+        "kind": kind,
+        "w": _array_digest(w),
+        "tmr": cfg.tmr,
+        "ir_drop": cfg.ir_drop,
+        "seed": cfg.seed,
+        "write_ber": cfg.write_ber,
+        "variation": None if spec is None else {
+            "corners": [dataclasses.asdict(c) for c in spec.corners],
+            "seed": spec.seed,
+            "distribution": spec.distribution,
+        },
+        "bitline": dataclasses.asdict(bl),
+    })
+
+
+def program_weights_cached(
+    w: jnp.ndarray,
+    kind: str = "afmtj",
+    cfg: AnalogConfig = AnalogConfig(),
+    bl: Optional[BitlineParams] = None,
+    cache_dir: Optional[str] = None,
+) -> ProgrammedArray:
+    """``program_weights`` behind the content-keyed store: a cache hit
+    returns the identical conductance plane + calibration scalars without
+    touching the programming chain."""
+    bl = bl or BitlineParams(rows=w.shape[0])
+    key = programming_key(w, kind, cfg, bl)
+    hit = _cache.load_arrays(key, cache_dir)
+    if hit is not None and "g_diff" in hit:
+        s = hit["scalars"]
+        return ProgrammedArray(
+            g_diff=jnp.asarray(hit["g_diff"], jnp.float32),
+            w_scale=float(s[0]), g_fs=float(s[1]), att_mean=float(s[2]),
+            g_rms=float(s[3]), dev=_device_for(kind, cfg), bl=bl, cfg=cfg)
+    arr = program_weights(w, kind, cfg, bl)
+    _cache.store_arrays(
+        key,
+        {"g_diff": np.asarray(arr.g_diff, np.float32),
+         "scalars": np.asarray([arr.w_scale, arr.g_fs, arr.att_mean,
+                                arr.g_rms], np.float64)},
+        {"kind": kind, "shape": list(arr.g_diff.shape), "tmr": cfg.tmr,
+         "seed": cfg.seed, "write_ber": cfg.write_ber, "key": key},
+        cache_dir)
+    return arr
+
+
+# ---------------------------------------------------------------------------
+# unrolled model forward + interception hooks
+# ---------------------------------------------------------------------------
+def _forward_unrolled(params, cfg: ArchConfig, tokens: jnp.ndarray):
+    """Full-sequence logits via an eager layer unroll (no lax.scan — the
+    device-path hook reduces to host floats, which cannot cross a scan).
+    Decoder-only: same blocks as ``forward_train``, full logits returned."""
+    assert cfg.n_encoder_layers == 0, "analog routing covers decoder-only"
+    x = model_mod._embed(params, cfg, tokens)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    for rep in range(cfg.n_pattern_repeats):
+        lp = jax.tree_util.tree_map(lambda a: a[rep], params["blocks"])
+        for i, (mixer, f) in enumerate(cfg.pattern):
+            x, _ = model_mod._run_block(lp[f"pos{i}"], x, cfg, mixer, f,
+                                        positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return model_mod._logits(params, cfg, x)
+
+
+def model_forward_logits(params, cfg: ArchConfig, tokens, hook=None):
+    """Eager unrolled forward; ``hook(x2d, w, tag)`` intercepts every
+    linear (None = exact f32 reference)."""
+    if hook is None:
+        return _forward_unrolled(params, cfg, tokens)
+    with intercept_linears(hook):
+        return _forward_unrolled(params, cfg, tokens)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_ref_forward(cfg: ArchConfig):
+    return jax.jit(lambda params, tokens: _forward_unrolled(params, cfg,
+                                                            tokens))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_fake_forward(cfg: ArchConfig, adc_bits: int, apply_fet: bool,
+                         use_fail: bool, ir_drop: bool, interpret: bool):
+    """Whole forward jitted with the fake-analog hook traced in: one XLA
+    executable per (arch, adc_bits) — TMR/corner/BER/seed arrive as data."""
+    body = functools.partial(_fake_mvm_body, adc_bits=adc_bits,
+                             apply_fet=apply_fet, use_fail=use_fail,
+                             ir_drop=ir_drop, has_imax=False, decode=True,
+                             interpret=interpret)
+
+    @jax.jit
+    def run(params, tokens, scal):
+        # rows = K of each site, like the device path's per-layer
+        # BitlineParams — shapes are static at trace time, so every site
+        # bakes its own IR line length into the one executable
+        def hook(x2, w, tag):
+            return body(x2, w, BitlineParams(rows=w.shape[0]), scal)
+
+        with intercept_linears(hook):
+            return _forward_unrolled(params, cfg, tokens)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_bnn_forward(cfg: ArchConfig, tie: int, interpret: bool):
+    @jax.jit
+    def run(params, tokens):
+        with intercept_linears(
+                lambda x2, w, tag: binary_matmul(x2, w, tie=tie,
+                                                 interpret=interpret)):
+            return _forward_unrolled(params, cfg, tokens)
+
+    return run
+
+
+def analog_model_logits(
+    params, cfg: ArchConfig, tokens,
+    acfg: AnalogConfig = AnalogConfig(),
+    kind: str = "afmtj",
+    mode: str = "fake",              # fake | device | bnn
+    tie: int = 1,
+    cache_dir: Optional[str] = None,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Full-sequence logits with every linear routed through the analog MVM."""
+    interp = _default_interpret() if interpret is None else interpret
+    if mode == "fake":
+        apply_fet, g_scale = _systematic_g_scale(acfg)
+        fn = _jitted_fake_forward(cfg, acfg.adc_bits, apply_fet,
+                                  acfg.write_ber > 0.0, acfg.ir_drop, interp)
+        # device constants are rows-independent (the FET series combination
+        # has no wire term), so one scalar pack serves every layer
+        scal = _fake_scalars(kind, acfg, BitlineParams(), g_scale, None)
+        return fn(params, tokens, scal)
+    if mode == "bnn":
+        return _jitted_bnn_forward(cfg, tie, interp)(params, tokens)
+    if mode == "device":
+        def hook(x2, w, tag):
+            arr = program_weights_cached(w, kind, acfg,
+                                         BitlineParams(rows=w.shape[0]),
+                                         cache_dir)
+            return analog_matmul(arr, x2, interpret=interp)
+
+        return model_forward_logits(params, cfg, tokens, hook)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# accuracy metrics + surfaces
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelAccuracyReport:
+    """Model-level accuracy of one analog configuration point."""
+
+    arch: str
+    kind: str
+    mode: str                      # fake | device | bnn
+    adc_bits: int
+    tmr: float
+    corner: str                    # systematic process corner name
+    write_ber: float
+    kl: float                      # mean KL(ref || analog) over positions
+    token_match: float             # greedy-argmax agreement rate
+    ppl_analog: float              # next-token perplexity, analog logits
+    ppl_ref: float                 # next-token perplexity, exact logits
+    batch: int
+    seq_len: int
+
+
+def logit_metrics(ref_logits, ana_logits, tokens
+                  ) -> Tuple[float, float, float, float]:
+    """(kl, token_match, ppl_analog, ppl_ref) from two (B, S, V) logit sets."""
+    lr = jax.nn.log_softmax(jnp.asarray(ref_logits, jnp.float32), axis=-1)
+    la = jax.nn.log_softmax(jnp.asarray(ana_logits, jnp.float32), axis=-1)
+    p = jnp.exp(lr)
+    kl = float(jnp.mean(jnp.sum(p * (lr - la), axis=-1)))
+    match = float(jnp.mean(
+        (jnp.argmax(la, axis=-1) == jnp.argmax(lr, axis=-1))
+        .astype(jnp.float32)))
+
+    def ppl(lp):
+        gold = jnp.take_along_axis(lp[:, :-1],
+                                   tokens[:, 1:][..., None], axis=-1)
+        return float(jnp.exp(-jnp.mean(gold)))
+
+    return kl, match, ppl(la), ppl(lr)
+
+
+def _arch_config(arch: str, smoke: bool) -> ArchConfig:
+    return smoke_config(arch) if smoke else get_arch(arch)
+
+
+def _setup(arch: str, smoke: bool, batch: int, seq_len: int, seed: int):
+    """(cfg, params, tokens, ref_logits) shared across surface points."""
+    cfg = _arch_config(arch, smoke)
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq_len)),
+                         jnp.int32)
+    ref_logits = _jitted_ref_forward(cfg)(params, tokens)
+    return cfg, params, tokens, ref_logits
+
+
+def _corner_spec(corner: str, seed: int) -> Optional[VariationSpec]:
+    if corner in ("", "tt"):
+        # tt is the all-1.0 nominal corner: identical conductances with or
+        # without the FET round trip, so skip the spec (and the recompile)
+        return None
+    return VariationSpec(corners=(PROCESS_CORNERS[corner],), seed=seed)
+
+
+def model_accuracy(
+    arch: str = "qwen2-0.5b",
+    acfg: AnalogConfig = AnalogConfig(),
+    kind: str = "afmtj",
+    mode: str = "fake",
+    corner: str = "tt",
+    batch: int = 2,
+    seq_len: int = 64,
+    seed: int = 0,
+    smoke: bool = True,
+    tie: int = 1,
+    cache_dir: Optional[str] = None,
+    _setup_state=None,
+) -> ModelAccuracyReport:
+    """One surface point: route the forward through the analog path, score
+    against the exact f32 logits on synthetic token sequences."""
+    if _setup_state is None:
+        _setup_state = _setup(arch, smoke, batch, seq_len, seed)
+    cfg, params, tokens, ref_logits = _setup_state
+    spec = _corner_spec(corner, acfg.seed)
+    if spec is not None:
+        acfg = dataclasses.replace(acfg, variation=spec)
+    ana = analog_model_logits(params, cfg, tokens, acfg, kind=kind,
+                              mode=mode, tie=tie, cache_dir=cache_dir)
+    kl, match, ppl_a, ppl_r = logit_metrics(ref_logits, ana, tokens)
+    tmr = acfg.tmr if acfg.tmr is not None else _device_for(kind, acfg).tmr
+    return ModelAccuracyReport(
+        arch=arch, kind=kind, mode=mode, adc_bits=acfg.adc_bits,
+        tmr=float(tmr), corner=corner, write_ber=acfg.write_ber, kl=kl,
+        token_match=match, ppl_analog=ppl_a, ppl_ref=ppl_r, batch=batch,
+        seq_len=seq_len)
+
+
+def model_accuracy_surface(
+    arch: str = "qwen2-0.5b",
+    kind: str = "afmtj",
+    mode: str = "fake",
+    adc_bits: Sequence[int] = (4, 6, 8),
+    tmrs: Sequence[Optional[float]] = (None,),
+    corners: Sequence[str] = ("tt",),
+    write_bers: Sequence[float] = (0.0,),
+    batch: int = 2,
+    seq_len: int = 64,
+    seed: int = 0,
+    smoke: bool = True,
+    cache_dir: Optional[str] = None,
+) -> Tuple[ModelAccuracyReport, ...]:
+    """The model-level accuracy surface: full outer product of the four
+    non-ideality axes, model/params/reference set up once."""
+    state = _setup(arch, smoke, batch, seq_len, seed)
+    out = []
+    for ber in write_bers:
+        for corner in corners:
+            for tmr in tmrs:
+                for bits in adc_bits:
+                    acfg = AnalogConfig(adc_bits=bits, tmr=tmr,
+                                        write_ber=ber, seed=seed)
+                    out.append(model_accuracy(
+                        arch, acfg, kind=kind, mode=mode, corner=corner,
+                        batch=batch, seq_len=seq_len, seed=seed, smoke=smoke,
+                        cache_dir=cache_dir, _setup_state=state))
+    return tuple(out)

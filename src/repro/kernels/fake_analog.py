@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: fused fake-analog MVM (program->IR-drop->ADC in one pass).
+
+The full device path (``imc.analog_pipeline``) materializes a programmed
+conductance pair per weight matrix on the host — ``program_weights`` reduces
+to Python floats (w_scale, att_mean, g_rms) and ``kernel_operands`` rounds
+the ADC full scale through a *string*, so every surface point pays host
+syncs plus a fresh ``_mvm_sharded`` compile (``i_max`` is a jit static).
+That is fine for one projection; it is intractable for (layers x batch x
+surface-points) model sweeps.
+
+This kernel is the batched fast path: the differential-conductance
+construction is replayed *inside* the matmul tile loop from the normalized
+weights, so programming never materializes and the whole chain is traced —
+one compile per (shape, adc_bits), sweep points are data.  Per (BK, BN)
+tile, in order (bit-matching ``program_weights``):
+
+  1. targets      — tp/tn = G_AP + max(+-wn, 0) * G_FS
+  2. corner FET   — push through the access FET, scale the junction by the
+                    systematic corner factor, come forward again (skipped
+                    when no variation spec, exactly like the device path)
+  3. write errors — failed cells drop to the G_AP floor (mask operand)
+  4. IR drop      — per-column attenuation planes (precomputed column sums;
+                    an (N,) reduction cannot live inside the K grid loop)
+  5. MAC + ADC    — att_p*tp - att_n*tn, one MXU dot per tile, f32
+                    accumulator scratch; epilogue quantizes through the
+                    *shared* ``adc_quantize`` and applies the decode scale.
+
+Scalars (ADC full scale, decode gain, device constants) ride in an (8, N)
+aux plane so they stay traced data, not compile keys.  Zero-padding is
+exact: padded K rows see v = 0 (no current), padded N columns carry att = 0
+(g_diff = 0).  Numerical parity vs the device path is pinned in
+``tests/test_analog_pipeline.py``; the jnp oracle is ``ref.ref_fake_analog``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitline_mac import BM, BN, BK, _pad2, adc_quantize
+
+# aux plane row layout (8, N) — per-column planes first, broadcast scalars
+# (stored across the full row) after
+ROW_ATT_POS = 0     # per-column IR attenuation, positive array
+ROW_ATT_NEG = 1     # per-column IR attenuation, negative array
+ROW_I_MAX = 2       # ADC full-scale current [A]
+ROW_DECODE = 3      # decode gain back to weight/activation units
+ROW_G_AP = 4        # effective AP-state conductance (G_AP floor) [S]
+ROW_G_FS = 5        # unit-weight differential conductance G_P - G_AP [S]
+ROW_G_SCALE = 6     # systematic corner junction conductance factor 1/r_f
+ROW_R_ACCESS = 7    # access transistor on-resistance [Ohm]
+AUX_ROWS = 8
+
+
+def pos_neg_conductance(wn, fail, g_ap, g_fs, g_scale, r_access, *,
+                        apply_fet: bool, use_fail: bool):
+    """Per-cell (g_pos, g_neg) pre-IR-drop conductances — the fused replay of
+    ``program_weights`` steps 1-3.  Shared by the kernel tile, the jnp
+    oracle, and the traced preamble that reduces the column sums for the IR
+    planes (``imc.model_analog``), so the cell math cannot drift."""
+    tp = g_ap + jnp.maximum(wn, 0.0) * g_fs
+    tn = g_ap + jnp.maximum(-wn, 0.0) * g_fs
+    if apply_fet:
+        def fet(t):
+            g_j = (t / (1.0 - r_access * t)) * g_scale
+            return g_j / (1.0 + r_access * g_j)
+
+        tp, tn = fet(tp), fet(tn)
+    if use_fail:
+        # fail encodes both masks: bit 0 = positive cell, bit 1 = negative
+        g_ap_b = jnp.broadcast_to(g_ap, tp.shape)
+        tp = jnp.where((fail == 1.0) | (fail == 3.0), g_ap_b, tp)
+        tn = jnp.where(fail >= 2.0, g_ap_b, tn)
+    return tp, tn
+
+
+def _tile_g_diff(wn, fail, aux, *, apply_fet: bool, use_fail: bool):
+    """(BK, BN) differential conductance tile from the aux-plane scalars."""
+    tp, tn = pos_neg_conductance(
+        wn, fail,
+        aux[ROW_G_AP:ROW_G_AP + 1, :1],
+        aux[ROW_G_FS:ROW_G_FS + 1, :1],
+        aux[ROW_G_SCALE:ROW_G_SCALE + 1, :1],
+        aux[ROW_R_ACCESS:ROW_R_ACCESS + 1, :1],
+        apply_fet=apply_fet, use_fail=use_fail)
+    att_p = aux[ROW_ATT_POS:ROW_ATT_POS + 1, :]
+    att_n = aux[ROW_ATT_NEG:ROW_ATT_NEG + 1, :]
+    return att_p * tp - att_n * tn
+
+
+def _fake_kernel(v_ref, w_ref, fail_ref, aux_ref, o_ref, acc_ref, *, nk: int,
+                 adc_bits: int, apply_fet: bool, use_fail: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g_diff = _tile_g_diff(w_ref[...], fail_ref[...], aux_ref[...],
+                          apply_fet=apply_fet, use_fail=use_fail)
+    acc_ref[...] += jnp.dot(
+        v_ref[...], g_diff, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        aux = aux_ref[...]
+        i_max = aux[ROW_I_MAX:ROW_I_MAX + 1, :]
+        dec = aux[ROW_DECODE:ROW_DECODE + 1, :]
+        i_bl = adc_quantize(acc_ref[...], adc_bits, i_max)
+        o_ref[...] = (i_bl * dec).astype(o_ref.dtype)
+
+
+def fake_analog_mac_pallas(
+    v: jnp.ndarray,               # (M, K) read voltages (batch x rows)
+    wn: jnp.ndarray,              # (K, N) normalized weights in [-1, 1]
+    fail: jnp.ndarray,            # (K, N) f32 write-fail code {0,1,2,3}
+    aux: jnp.ndarray,             # (8, N) f32 aux plane (ROW_* layout)
+    adc_bits: int = 0,
+    apply_fet: bool = False,
+    use_fail: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    M, K = v.shape
+    K2, N = wn.shape
+    assert K == K2, (v.shape, wn.shape)
+    assert fail.shape == wn.shape, (fail.shape, wn.shape)
+    assert aux.shape == (AUX_ROWS, N), (aux.shape, N)
+    assert adc_bits == 0 or adc_bits >= 2, adc_bits
+    from jax.experimental.pallas import tpu as pltpu
+
+    v = _pad2(v, BM, BK)
+    wn = _pad2(wn, BK, BN)
+    fail = _pad2(fail, BK, BN)
+    aux = _pad2(aux, AUX_ROWS, BN)
+    mp, kp = v.shape
+    _, np_ = wn.shape
+    nk = kp // BK
+    kern = functools.partial(_fake_kernel, nk=nk, adc_bits=adc_bits,
+                             apply_fet=apply_fet, use_fail=use_fail)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // BM, np_ // BN, nk),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((BK, BN), lambda i, j, k: (k, j)),
+            pl.BlockSpec((AUX_ROWS, BN), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k: (i, j)),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+        interpret=interpret,
+    )(v, wn, fail, aux)
+    if (mp, np_) != (M, N):
+        out = out[:M, :N]
+    return out

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.common import ParamSpec, apply_rope, rms_norm, softcap
+from repro.models.common import ParamSpec, apply_rope, linear, rms_norm, softcap
 from repro.models.sharding_hooks import constrain
 
 # Above this query length the flash path is used even in training — a 4k x 4k
@@ -47,9 +47,9 @@ def attn_specs(cfg: ArchConfig, cross: bool = False) -> Dict[str, ParamSpec]:
 def _project_qkv(p, x, cfg: ArchConfig, positions, rope: bool = True):
     B, S, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
-    q = x @ p["wq"].astype(x.dtype)
-    k = x @ p["wk"].astype(x.dtype)
-    v = x @ p["wv"].astype(x.dtype)
+    q = linear(x, p["wq"].astype(x.dtype), "wq")
+    k = linear(x, p["wk"].astype(x.dtype), "wk")
+    v = linear(x, p["wv"].astype(x.dtype), "wv")
     if "bq" in p:
         q = q + p["bq"].astype(x.dtype)
         k = k + p["bk"].astype(x.dtype)
@@ -69,7 +69,7 @@ def _project_qkv(p, x, cfg: ArchConfig, positions, rope: bool = True):
 def _merge_heads(p, o, cfg: ArchConfig):
     B, S = o.shape[:2]
     o = o.reshape(B, S, cfg.n_heads * cfg.d_head)
-    return o @ p["wo"].astype(o.dtype)
+    return linear(o, p["wo"].astype(o.dtype), "wo")
 
 
 def _mask_full(S: int, Skv: int, causal: bool, window: Optional[int], offset: int = 0):
@@ -170,7 +170,7 @@ def cross_attention(p, x, mem_k, mem_v, cfg: ArchConfig):
     """Decoder cross-attention over precomputed encoder K/V."""
     B, S, _ = x.shape
     h, hd = cfg.n_heads, cfg.d_head
-    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, h, hd)
+    q = linear(x, p["wq"].astype(x.dtype), "wq").reshape(B, S, h, hd)
     o = full_attention(q, mem_k, mem_v, cfg, causal=False, window=None)
     return _merge_heads(p, o, cfg)
 
@@ -178,8 +178,8 @@ def cross_attention(p, x, mem_k, mem_v, cfg: ArchConfig):
 def project_memory_kv(p, mem, cfg: ArchConfig):
     B, S, _ = mem.shape
     kv, hd = cfg.n_kv_heads, cfg.d_head
-    k = (mem @ p["wk"].astype(mem.dtype)).reshape(B, S, kv, hd)
-    v = (mem @ p["wv"].astype(mem.dtype)).reshape(B, S, kv, hd)
+    k = linear(mem, p["wk"].astype(mem.dtype), "wk").reshape(B, S, kv, hd)
+    v = linear(mem, p["wv"].astype(mem.dtype), "wv").reshape(B, S, kv, hd)
     return k, v
 
 

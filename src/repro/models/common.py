@@ -69,6 +69,50 @@ def logical_axes(specs: Any) -> Any:
 
 
 # --------------------------------------------------------------------------
+# linear-layer interception (analog IMC routing — DESIGN.md §12)
+# --------------------------------------------------------------------------
+# All crossbar-mappable GEMMs in the model stack funnel through ``linear``
+# so `imc.model_analog` can reroute them through the differential-conductance
+# MVM without forking the forward code.  The hook is a plain module global
+# (not a context-local): model_analog's unrolled forward is eager and
+# single-threaded, and a global keeps the default path free of any overhead
+# beyond one ``is None`` check.
+_LINEAR_HOOK = None
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, tag: str = "") -> jnp.ndarray:
+    """``x @ w`` with optional interception.
+
+    ``x`` may have any number of leading dims; ``w`` is 2-D (K, N).  The hook
+    (if installed) receives a 2-D ``(M, K)`` view plus the site tag and must
+    return ``(M, N)``.
+    """
+    if _LINEAR_HOOK is None:
+        return x @ w
+    lead = x.shape[:-1]
+    y = _LINEAR_HOOK(x.reshape(-1, x.shape[-1]), w, tag)
+    return y.reshape(*lead, w.shape[-1])
+
+
+class intercept_linears:
+    """Context manager installing ``hook(x2d, w, tag) -> y2d`` on ``linear``."""
+
+    def __init__(self, hook):
+        self.hook = hook
+
+    def __enter__(self):
+        global _LINEAR_HOOK
+        self._prev = _LINEAR_HOOK
+        _LINEAR_HOOK = self.hook
+        return self
+
+    def __exit__(self, *exc):
+        global _LINEAR_HOOK
+        _LINEAR_HOOK = self._prev
+        return False
+
+
+# --------------------------------------------------------------------------
 # numerics
 # --------------------------------------------------------------------------
 def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.common import ParamSpec, act_fn
+from repro.models.common import ParamSpec, act_fn, linear
 
 MOE_GROUP = 1024          # tokens per dispatch group
 CAPACITY_FACTOR = 1.25
@@ -32,9 +32,9 @@ def dense_ffn_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
 
 
 def dense_ffn(p, x, cfg: ArchConfig):
-    g = act_fn(x @ p["w_gate"].astype(x.dtype), cfg.act)
-    u = x @ p["w_up"].astype(x.dtype)
-    return (g * u) @ p["w_down"].astype(x.dtype)
+    g = act_fn(linear(x, p["w_gate"].astype(x.dtype), "w_gate"), cfg.act)
+    u = linear(x, p["w_up"].astype(x.dtype), "w_up")
+    return linear(g * u, p["w_down"].astype(x.dtype), "w_down")
 
 
 def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:

@@ -29,6 +29,7 @@ from repro.models.common import (
     ParamSpec,
     abstract_params as _abstract,
     init_params as _init,
+    linear,
     logical_axes as _axes,
     rms_norm,
     softcap,
@@ -185,7 +186,7 @@ def _unembed_matrix(params, cfg: ArchConfig):
 
 def _logits(params, cfg: ArchConfig, h):
     w = _unembed_matrix(params, cfg)
-    logits = h @ w.astype(h.dtype)
+    logits = linear(h, w.astype(h.dtype), "unembed")
     logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
     return constrain(logits, "logits")
 

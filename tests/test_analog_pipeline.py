@@ -176,6 +176,144 @@ def test_bnn_mode_correlates():
     assert np.corrcoef(y.ravel(), y_ref.ravel())[0, 1] > 0.5
 
 
+# --- tentpole: fused fake-analog path vs the device path ---------------------
+# The fake kernel replays programming inside the matmul tiles (DESIGN.md
+# §12); these pins keep it numerically indistinguishable from the
+# program_weights -> kernel_operands -> analog_matmul chain.
+
+def _device_fake_pair(w, x, cfg, **fake_kw):
+    """(device output, fake output, i_max) with the device path's exact ADC
+    full scale fed to the fake kernel — isolates cell math from the
+    decimal-vs-binary 2-significant-digit rounding."""
+    from repro.imc.analog_pipeline import kernel_operands
+    from repro.imc.model_analog import fake_analog_matmul
+
+    arr = program_weights(w, "afmtj", cfg)
+    _, i_max, _ = kernel_operands(arr, x)
+    y_dev = np.asarray(analog_matmul(arr, x))
+    y_fake = np.asarray(fake_analog_matmul(w, x, cfg=cfg, i_max=i_max,
+                                           **fake_kw))
+    return y_dev, y_fake, i_max
+
+
+@pytest.mark.parametrize("shape", [(5, 200, 77), (3, 130, 190)])
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_fake_analog_parity(shape, bits):
+    """Odd shapes x ADC resolutions: decoded outputs agree to f32-vs-f64
+    decode rounding (the only remaining difference in the chain)."""
+    m, k, n = shape
+    w, x = _wx(k=k, n=n, m=m, seed=bits)
+    y_dev, y_fake, _ = _device_fake_pair(w, x, AnalogConfig(adc_bits=bits))
+    np.testing.assert_allclose(y_fake, y_dev, rtol=1e-5,
+                               atol=1e-5 * np.abs(y_dev).max())
+
+
+def test_fake_analog_default_fullscale_parity():
+    """With the fake path sizing its own ADC full scale (traceable
+    2-significant-digit rounding vs the device's string round-trip) the
+    decoded outputs still agree tightly on random data."""
+    from repro.imc.model_analog import fake_analog_matmul
+
+    w, x = _wx()
+    cfg = AnalogConfig(adc_bits=6)
+    y_dev = np.asarray(analog_matmul(program_weights(w, "afmtj", cfg), x))
+    y_fake = np.asarray(fake_analog_matmul(w, x, cfg=cfg))
+    np.testing.assert_allclose(y_fake, y_dev, rtol=1e-4,
+                               atol=1e-4 * np.abs(y_dev).max())
+
+
+def test_fake_analog_raw_currents_bit_equal():
+    """Acceptance pin: at zero IR drop with a shared ADC full scale the
+    *quantized bit-line currents* are bit-equal between the two paths."""
+    from repro.imc.analog_pipeline import kernel_operands
+    from repro.imc.model_analog import fake_analog_matmul
+
+    w, x = _wx()
+    cfg = AnalogConfig(adc_bits=6, ir_drop=False)
+    arr = program_weights(w, "afmtj", cfg)
+    v, i_max, _ = kernel_operands(arr, x)
+    i_dev = np.asarray(ops.bitline_mac(v, arr.g_diff, 6, i_max=i_max))
+    i_fake = np.asarray(fake_analog_matmul(w, x, cfg=cfg, i_max=i_max,
+                                           decode=False))
+    assert np.array_equal(i_fake, i_dev)
+
+
+def test_fake_analog_signed_currents():
+    """Signed activations keep their negative contributions through the
+    fused quantize -> decode chain."""
+    from repro.imc.model_analog import fake_analog_matmul
+
+    w, x = _wx()
+    y = np.asarray(fake_analog_matmul(w, x, cfg=AnalogConfig(adc_bits=6)))
+    y_ref = np.asarray(x @ w)
+    assert (y < 0).sum() > 0.3 * y.size
+    assert np.corrcoef(y.ravel(), y_ref.ravel())[0, 1] > 0.99
+
+
+def test_fake_analog_write_ber_parity():
+    """Residual write faults draw the identical Bernoulli stream on both
+    paths (same fold_in salt), so faulty cells land identically."""
+    w, x = _wx(k=130, n=100, m=5)
+    cfg = AnalogConfig(adc_bits=6, write_ber=0.02, seed=3)
+    y_dev, y_fake, _ = _device_fake_pair(w, x, cfg)
+    np.testing.assert_allclose(y_fake, y_dev, rtol=1e-5,
+                               atol=1e-5 * np.abs(y_dev).max())
+
+
+@pytest.mark.parametrize("corner", ["ss", "ff"])
+def test_fake_analog_corner_parity(corner):
+    """Systematic process corners round-trip through the access FET exactly
+    as the device path's lane factors do."""
+    from repro.core.params import PROCESS_CORNERS, VariationSpec
+
+    w, x = _wx(k=130, n=100, m=5, seed=7)
+    cfg = AnalogConfig(adc_bits=6, variation=VariationSpec(
+        corners=(PROCESS_CORNERS[corner],)))
+    y_dev, y_fake, _ = _device_fake_pair(w, x, cfg)
+    np.testing.assert_allclose(y_fake, y_dev, rtol=1e-5,
+                               atol=1e-5 * np.abs(y_dev).max())
+
+
+def test_fake_analog_d2d_raises():
+    """Per-cell D2D spreads are device-path-only; the fake path must refuse
+    rather than silently drop the variation."""
+    from repro.core.params import VariationSpec
+    from repro.imc.model_analog import fake_analog_matmul
+
+    w, x = _wx(k=64, n=32, m=2)
+    cfg = AnalogConfig(adc_bits=6,
+                       variation=VariationSpec.from_g_sigma(0.05))
+    with pytest.raises(NotImplementedError):
+        fake_analog_matmul(w, x, cfg=cfg)
+
+
+def test_fake_kernel_matches_oracle():
+    """Kernel vs jnp oracle on raw operands (odd shape, FET + fail planes
+    active): the Pallas tile replay equals the whole-array reference."""
+    from repro.kernels.fake_analog import (AUX_ROWS, ROW_ATT_NEG, ROW_ATT_POS,
+                                           ROW_DECODE, ROW_G_AP, ROW_G_FS,
+                                           ROW_G_SCALE, ROW_I_MAX,
+                                           ROW_R_ACCESS, fake_analog_mac_pallas)
+
+    m, k, n = 5, 150, 70
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    v = jax.random.normal(ks[0], (m, k)) * 0.1
+    wn = jnp.tanh(jax.random.normal(ks[1], (k, n)))
+    fail = jax.random.randint(ks[2], (k, n), 0, 4).astype(jnp.float32)
+    att = 0.9 + 0.1 * jax.random.uniform(ks[3], (2, n))
+    aux = jnp.zeros((AUX_ROWS, n), jnp.float32)
+    aux = aux.at[ROW_ATT_POS].set(att[0]).at[ROW_ATT_NEG].set(att[1])
+    aux = aux.at[ROW_I_MAX].set(2e-3).at[ROW_DECODE].set(1234.5)
+    aux = aux.at[ROW_G_AP].set(2e-4).at[ROW_G_FS].set(3e-4)
+    aux = aux.at[ROW_G_SCALE].set(1.05).at[ROW_R_ACCESS].set(1e3)
+    kw = dict(adc_bits=5, apply_fet=True, use_fail=True)
+    out_k = np.asarray(fake_analog_mac_pallas(v, wn, fail, aux,
+                                              interpret=True, **kw))
+    out_r = np.asarray(ref.ref_fake_analog(v, wn, fail, aux, **kw))
+    assert out_k.shape == (m, n)
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-6, atol=1e-6 * 1234.5)
+
+
 # --- mapping wiring ----------------------------------------------------------
 
 def test_accuracy_surface_shape():

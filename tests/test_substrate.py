@@ -165,11 +165,29 @@ def test_resolve_pspec_divisibility():
 
 
 def test_resolve_pspec_uneven_drops_axis():
-    import jax
-    from jax.sharding import PartitionSpec as P
-    from repro.launch.sharding import resolve_pspec
+    """Uneven shards drop the mesh axis instead of erroring — a multi-device
+    property, exercised on 4 forced host devices in a subprocess (the
+    in-process backend is already initialized single-device)."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
 
-    if jax.device_count() < 2:
-        pytest.skip("needs >=2 devices — uneven-shard axis dropping is a "
-                    "multi-device property; the TPU dry-run workflow "
-                    "(ROADMAP.md) exercises it on real meshes")
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.launch.sharding import resolve_pspec
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+rules = {"vocab": ("model",), "embed": ("data",)}
+sp_even = resolve_pspec((100, 64), ("vocab", "embed"), rules, mesh)
+sp_odd = resolve_pspec((101, 64), ("vocab", "embed"), rules, mesh)
+ok = sp_even == P("model", "data") and sp_odd == P(None, "data")
+print("PSPEC_OK", ok, "|", sp_even, "|", sp_odd)
+"""
+    repo = Path(__file__).resolve().parents[1]
+    r = subprocess.run([sys.executable, "-c", code],
+                       env={**os.environ, "PYTHONPATH": str(repo / "src")},
+                       capture_output=True, text=True, timeout=300)
+    assert "PSPEC_OK True" in r.stdout, (r.stdout, r.stderr[-2000:])
