@@ -29,10 +29,14 @@ modeled-vs-paper comparison where the paper reports numbers.
                transformer forwards through the analog MVM, the fused
                fake-analog speedup pin vs the per-projection device loop,
                BNN variant, and the logits-KL surface over adc_bits
+  fault      — hard-fault injection + graceful degradation (DESIGN.md
+               §13): accuracy/SLO vs fault rate x repair policy with the
+               repair knee, the masks-are-data compile pin, repair-capacity
+               yield, and the crash-resumable campaign check
 
 ``--smoke`` shrinks shapes and skips steady-state warmups so CI can exercise
 kernel-vs-reference parity on every push (honored by ``mvm``, ``wer``,
-``write``, ``variation``, ``read`` and ``model``).
+``write``, ``variation``, ``read``, ``model`` and ``fault``).
 
 ``--json PATH`` additionally writes every emitted row to a machine-readable
 BENCH.json: ``{name, value, units, wall_us, cold_us}`` per row plus run
@@ -896,6 +900,152 @@ def bench_model():
           "the adc8 qwen2 point is the golden pin in tests/test_model_analog.py")
 
 
+def bench_fault():
+    """Hard-fault injection and graceful degradation (DESIGN.md §13):
+    model KL / token-match degradation curves vs fault rate x repair
+    policy (with the knee where remapping stops saving accuracy), the
+    masks-are-data compile pin (a whole rate sweep shares one XLA
+    executable per policy — ``fault_masks_data_ok``), repair-capacity
+    yield, serving SLO attainment under faults, and the crash-resumable
+    campaign check (``campaign_resume_ok``).  Smoke shrinks the model
+    shape and request counts; the curve shapes are identical."""
+    import tempfile
+
+    from repro.imc.analog_pipeline import AnalogConfig
+    from repro.imc.faults import (FaultSpec, REPAIR_SPARE, REPAIR_SPARE_ECC)
+    from repro.imc.mapping import fault_cost_factors
+    from repro.imc.model_analog import (_default_interpret, _fake_faults_mode,
+                                        _jitted_fake_forward, _setup,
+                                        _systematic_g_scale, degradation_knee,
+                                        model_degradation_curves)
+    from repro.launch.simulate import fault_slo_curve
+
+    arch = "qwen2-0.5b"
+    batch, seq_len = (1, 32) if SMOKE else (2, 64)
+    rates = (0.0, 3e-3, 1e-2, 3e-2) if SMOKE else (0.0, 1e-3, 3e-3, 1e-2,
+                                                   3e-2)
+    policies = (None, REPAIR_SPARE)
+    print(f"# fault: stuck-at/endurance fault planes through the analog "
+          f"stack ({arch} smoke config, batch={batch}, seq={seq_len}, "
+          f"{'smoke' if SMOKE else 'full'})")
+    print("name,us_per_call,derived")
+
+    # --- graceful-degradation curves: accuracy vs rate x repair policy
+    reports, us_c = _t(lambda: model_degradation_curves(
+        arch, rates=rates, policies=policies, batch=batch, seq_len=seq_len))
+    by_pol = {}
+    for r in reports:
+        by_pol.setdefault(r.repair, []).append(r)
+        tag = f"fault.model.{r.repair}.r{r.fault_rate:g}"
+        emit(f"{tag}.kl", us_c / len(reports), f"{r.kl:.4f}")
+        emit(f"{tag}.token_match", 0, f"{r.token_match:.3f}")
+    mono = all(
+        all(a.kl <= b.kl + 1e-9 and a.token_match >= b.token_match - 1e-9
+            for a, b in zip(rs, rs[1:]))
+        for rs in by_pol.values())
+    emit("fault.kl_monotone_ok", 0, int(mono))
+    # knee threshold relative to the fault-free accuracy: the smoke model's
+    # absolute token match is low, but "how far can faults push before we
+    # lose 20% of the healthy accuracy" is shape-independent
+    bar = 0.8 * by_pol["none"][0].token_match
+    knees = degradation_knee(reports, min_token_match=bar)
+    for pol, knee in sorted(knees.items()):
+        emit(f"fault.knee.{pol}", 0, f"{knee:g}")
+    top_none = by_pol["none"][-1]
+    top_spare = by_pol[REPAIR_SPARE.name][-1]
+    emit("fault.repair_extends_knee_ok", 0,
+         int(knees[REPAIR_SPARE.name] > knees["none"]
+             or top_spare.kl < top_none.kl))
+    print(f"# spare-row/col remap holds token match >= {bar:.2f} out to "
+          f"rate {knees[REPAIR_SPARE.name]:g} vs {knees['none']:g} bare, "
+          f"and top-rate KL {top_spare.kl:.2f} vs {top_none.kl:.2f}")
+
+    # --- the tentpole pin: fault masks are data, not compile keys — the
+    # whole rate sweep above compiled ONE executable per repair policy
+    compiles = []
+    cfg, *_ = _setup(arch, True, batch, seq_len, 0)
+    for pol in policies:
+        acfg = AnalogConfig(adc_bits=6, seed=0,
+                            faults=FaultSpec.at_rate(1e-3, seed=0),
+                            repair=pol)
+        apply_fet, _ = _systematic_g_scale(acfg)
+        fn = _jitted_fake_forward(cfg, 6, apply_fet, False, acfg.ir_drop,
+                                  _default_interpret(),
+                                  _fake_faults_mode(acfg), pol)
+        compiles.append(fn._cache_size())
+    emit("fault.compiles_per_policy", 0, max(compiles))
+    emit("fault_masks_data_ok", 0, int(all(c == 1 for c in compiles)))
+
+    # --- repair-capacity yield at a fixed defect rate
+    spec = FaultSpec.at_rate(1e-3, seed=0)
+    for name, pol in (("none", None), ("spare", REPAIR_SPARE),
+                      ("spare_ecc", REPAIR_SPARE_ECC)):
+        y, ovh, stretch = fault_cost_factors(spec, pol)
+        emit(f"fault.yield.{name}", 0, f"{y:.3e}")
+        emit(f"fault.cell_overhead.{name}", 0, f"{ovh:.3f}")
+    print("# without spares one stuck pair condemns a row — array yield "
+          "collapses; 8+8 spares recover it for ~7% cell overhead")
+
+    # --- serving: SLO attainment vs fault rate (held offered load/trace)
+    n_req = 600 if SMOKE else 4000
+    slo_rates = (0.0, 1e-4, 3e-4, 1e-3)
+    pts, us_s = _t(lambda: fault_slo_curve(
+        "afmtj", rates=slo_rates, policies=policies, n_requests=n_req))
+    slo_by_pol = {}
+    for p in pts:
+        slo_by_pol.setdefault(p.repair, []).append(p)
+        emit(f"fault.slo.{p.repair}.r{p.fault_rate:g}",
+             us_s / len(pts), f"{p.slo_attainment:.4f}")
+    slo_mono = all(
+        all(a.slo_attainment >= b.slo_attainment - 1e-9
+            for a, b in zip(ps, ps[1:]))
+        for ps in slo_by_pol.values())
+    spare_holds = (slo_by_pol[REPAIR_SPARE.name][-1].slo_attainment
+                   >= slo_by_pol["none"][-1].slo_attainment)
+    emit("fault.slo_monotone_ok", 0, int(slo_mono and spare_holds))
+
+    # --- crash-resumable campaigns: abort after the first launch, resume
+    # from the slice checkpoints, assemble bit-identically
+    from repro.campaign.engine import run_campaign
+    from repro.campaign.grid import CampaignGrid, bucket_cells
+    from repro.core.params import AFMTJ_PARAMS
+
+    grid = CampaignGrid(voltages=(0.6, 1.2), pulse_widths=(120e-12,),
+                        temperatures=(300.0, 350.0), n_samples=16,
+                        dt=0.1e-12, seed=0)
+    per = bucket_cells(grid.cells)
+
+    class _Abort(Exception):
+        pass
+
+    def die_early(i, n):
+        if i == 0:
+            raise _Abort
+
+    fresh, us_fresh = _t(lambda: run_campaign(
+        AFMTJ_PARAMS, grid, backend="ref", use_cache=False,
+        max_cells_per_launch=per))
+    with tempfile.TemporaryDirectory() as td:
+        try:
+            run_campaign(AFMTJ_PARAMS, grid, backend="ref", cache_dir=td,
+                         max_cells_per_launch=per, on_slice_complete=die_early)
+        except _Abort:
+            pass
+        resumed, us_res = _t(lambda: run_campaign(
+            AFMTJ_PARAMS, grid, backend="ref", cache_dir=td,
+            max_cells_per_launch=per))
+    identical = bool(np.array_equal(np.asarray(resumed.crossing_time),
+                                    np.asarray(fresh.crossing_time)))
+    emit("fault.resume.n_resumed", us_res, resumed.n_resumed)
+    emit("fault.resume.fresh_us", us_fresh, f"{us_fresh:.0f}", "us")
+    emit("campaign_resume_ok", 0,
+         int(identical and resumed.n_resumed >= 1 and not resumed.from_cache))
+    print(f"# killed after launch 1/{resumed.n_launches}: resume skipped "
+          f"{resumed.n_resumed} checkpointed slice(s) "
+          f"({us_res/1e6:.2f}s vs {us_fresh/1e6:.2f}s fresh), "
+          f"crossing tensor bit-identical={identical}")
+
+
 BENCHES = {
     "table1": bench_table1,
     "fig3": bench_fig3,
@@ -910,6 +1060,7 @@ BENCHES = {
     "read": bench_read,
     "serve": bench_serve,
     "model": bench_model,
+    "fault": bench_fault,
 }
 
 
@@ -934,10 +1085,21 @@ def main() -> None:
                      f"choices: {sorted(BENCHES)}")
     else:
         names = list(BENCHES)
+    from repro.runtime.fault import StepWatchdog
+
+    # per-bench wall-time watchdog: a bench that blows past 3x the running
+    # average usually means an accidental full-mode shape or a compile
+    # regression — flag it in the log (and BENCH.json meta) instead of
+    # letting it hide inside the total
+    wd = StepWatchdog(threshold=3.0, alpha=0.5)
     t0 = time.time()
-    for n in names:
+    for i, n in enumerate(names):
         print(f"\n=== {n} " + "=" * (60 - len(n)))
+        tb = time.time()
         BENCHES[n]()
+        if wd.observe(i, time.time() - tb):
+            print(f"# watchdog: bench '{n}' took "
+                  f"{time.time() - tb:.1f}s, >3x the running average")
     total = time.time() - t0
     print(f"\ntotal {total:.1f}s")
     if args.json:
@@ -949,6 +1111,7 @@ def main() -> None:
                 "device_count": jax.device_count(),
                 "jax": jax.__version__,
                 "total_s": round(total, 3),
+                "straggler_benches": [names[i] for i in wd.straggler_steps],
                 "unix_time": int(time.time()),
             },
             "benchmarks": RECORDS,

@@ -1,0 +1,149 @@
+"""Fault study: graceful degradation under hard faults, with and without
+repair (DESIGN.md §13).
+
+Injects stuck-at / dead-line defect planes (``FaultSpec``) at increasing
+cell-fault rates through three layers of the stack and prints:
+
+1. array yield and cell-area overhead per repair policy (the Poisson
+   repair-capacity model — why bare differential arrays are hopeless),
+2. model-level accuracy degradation curves (KL and greedy token match of
+   a whole analog-routed transformer forward) vs rate × repair policy,
+   with the knee where remapping stops saving accuracy,
+3. serving SLO attainment on a fixed Poisson trace re-priced under each
+   (policy, rate) — the device-time stretch surfacing as tail latency,
+4. a crash-resume demonstration: a multi-launch campaign aborted after
+   its first launch resumes from slice checkpoints bit-identically.
+
+The whole rate sweep in (2) shares ONE XLA executable per repair policy —
+fault rates and seeds ride the kernel's aux operand as data.
+
+Run:  PYTHONPATH=src python examples/fault_study.py [--quick]
+"""
+import argparse
+import tempfile
+
+import numpy as np
+
+RATES = (0.0, 1e-3, 3e-3, 1e-2, 3e-2)
+SLO_RATES = (0.0, 1e-4, 3e-4, 1e-3)
+
+
+def yield_table(rate):
+    from repro.imc.faults import (FaultSpec, REPAIR_SPARE, REPAIR_SPARE_ECC)
+    from repro.imc.mapping import fault_cost_factors
+
+    spec = FaultSpec.at_rate(rate, seed=0)
+    print(f"\n== repair-capacity yield at cell-fault rate {rate:g} ==")
+    print(f"{'policy':10s} {'yield':>12s} {'cell_ovh':>9s} {'t_stretch':>10s}")
+    for name, pol in (("none", None), ("spare", REPAIR_SPARE),
+                      ("spare+ecc", REPAIR_SPARE_ECC)):
+        y, ovh, stretch = fault_cost_factors(spec, pol)
+        print(f"{name:10s} {y:12.3e} {ovh:9.3f} {stretch:10.3g}")
+    print("one uncorrected stuck pair condemns a row: without spares the "
+          "Poisson capacity model collapses the yield")
+
+
+def degradation_table(arch, rates, batch, seq_len):
+    from repro.imc.faults import REPAIR_SPARE
+    from repro.imc.model_analog import (degradation_knee,
+                                        model_degradation_curves)
+
+    print(f"\n== model degradation: {arch} smoke forward, "
+          f"batch {batch} x seq {seq_len} ==")
+    reports = model_degradation_curves(arch, rates=rates,
+                                       policies=(None, REPAIR_SPARE),
+                                       batch=batch, seq_len=seq_len)
+    by_pol = {}
+    for r in reports:
+        by_pol.setdefault(r.repair, []).append(r)
+    print(f"{'rate':>8s}" + "".join(
+        f" {p + '.kl':>10s} {p + '.match':>9s}" for p in by_pol))
+    for i, rate in enumerate(rates):
+        row = f"{rate:8g}"
+        for rs in by_pol.values():
+            row += f" {rs[i].kl:10.4f} {rs[i].token_match:9.3f}"
+        print(row)
+    bar = 0.8 * by_pol["none"][0].token_match
+    knees = degradation_knee(reports, min_token_match=bar)
+    print(f"knee (largest rate with token match >= {bar:.2f}): "
+          + ", ".join(f"{p}={k:g}" for p, k in sorted(knees.items())))
+    return reports
+
+
+def slo_table(rates, n_requests):
+    from repro.imc.faults import REPAIR_SPARE
+    from repro.launch.simulate import fault_slo_curve
+
+    print(f"\n== serving SLO attainment vs fault rate "
+          f"({n_requests} Poisson requests, fixed trace + healthy SLO) ==")
+    pts = fault_slo_curve("afmtj", rates=rates,
+                          policies=(None, REPAIR_SPARE),
+                          n_requests=n_requests)
+    print(f"{'policy':8s} {'rate':>8s} {'yield':>10s} {'SLO':>6s} "
+          f"{'tpot_p99':>10s} {'tok/J':>10s}")
+    for p in pts:
+        print(f"{p.repair:8s} {p.fault_rate:8g} {p.array_yield:10.3e} "
+              f"{p.slo_attainment:6.3f} {p.tpot_p99_s:10.3e} "
+              f"{p.tokens_per_joule:10.3e}")
+
+
+def resume_demo():
+    from repro.campaign.engine import run_campaign
+    from repro.campaign.grid import CampaignGrid, bucket_cells
+    from repro.core.params import AFMTJ_PARAMS
+
+    print("\n== crash-resumable campaign ==")
+    grid = CampaignGrid(voltages=(0.6, 1.2), pulse_widths=(120e-12,),
+                        temperatures=(300.0, 350.0), n_samples=16,
+                        dt=0.1e-12, seed=0)
+    per = bucket_cells(grid.cells)
+
+    class Abort(Exception):
+        pass
+
+    def die_early(i, n):
+        print(f"  launch {i + 1}/{n} checkpointed ... simulated crash")
+        if i == 0:
+            raise Abort
+
+    fresh = run_campaign(AFMTJ_PARAMS, grid, backend="ref", use_cache=False,
+                         max_cells_per_launch=per)
+    with tempfile.TemporaryDirectory() as td:
+        try:
+            run_campaign(AFMTJ_PARAMS, grid, backend="ref", cache_dir=td,
+                         max_cells_per_launch=per, on_slice_complete=die_early)
+        except Abort:
+            pass
+        res = run_campaign(AFMTJ_PARAMS, grid, backend="ref", cache_dir=td,
+                           max_cells_per_launch=per)
+    same = np.array_equal(np.asarray(res.crossing_time),
+                          np.asarray(fresh.crossing_time))
+    print(f"  resumed: {res.n_resumed}/{res.n_launches} launches from "
+          f"checkpoints, crossing tensor bit-identical={same}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller forward + fewer requests (seconds)")
+    args = ap.parse_args()
+    batch, seq_len = (1, 32) if args.quick else (2, 64)
+    rates = (0.0, 3e-3, 1e-2, 3e-2) if args.quick else RATES
+    n_requests = 600 if args.quick else 4000
+
+    yield_table(1e-3)
+    degradation_table(args.arch, rates, batch, seq_len)
+    slo_table(SLO_RATES, n_requests)
+    resume_demo()
+    print("\nReading the curves: spare-row/col remap + differential-pair "
+          "masking extends the accuracy knee by roughly a decade of fault "
+          "rate for a few percent cell overhead; past the spare capacity "
+          "the curves converge — remapping stops saving accuracy. On the "
+          "serving side bare arrays miss SLO almost immediately (the "
+          "yield-capped time stretch), while repaired arrays hold "
+          "attainment through 1e-3.")
+
+
+if __name__ == "__main__":
+    main()

@@ -77,12 +77,42 @@ def load_arrays(key: str, cache_dir: Optional[str] = None
         return None                      # corrupt entry == miss
 
 
+def gc_stale_tmp(cache_dir: Optional[str] = None,
+                 max_age_s: float = 86400.0) -> int:
+    """Remove ``*.tmp`` droppings older than ``max_age_s`` seconds.
+
+    A process SIGKILLed mid-``store_arrays`` leaves its mkstemp file behind
+    (the atomic rename never ran, so no ``.npz`` is ever torn — but the tmp
+    bytes still occupy disk).  The age guard keeps the sweep safe against
+    *live* writers in other processes: a concurrent store's tmp file is
+    seconds old, far under any sane ``max_age_s``.  Returns the number of
+    files removed; every error is best-effort-ignored (a racing writer may
+    rename or unlink first).
+    """
+    import time
+
+    d = Path(cache_dir or DEFAULT_CACHE_DIR)
+    if not d.is_dir():
+        return 0
+    cutoff = time.time() - max_age_s
+    removed = 0
+    for tmp in d.glob("*.tmp"):
+        try:
+            if tmp.stat().st_mtime <= cutoff:
+                tmp.unlink()
+                removed += 1
+        except OSError:
+            continue
+    return removed
+
+
 def store_arrays(key: str, arrays: dict, header: dict,
                  cache_dir: Optional[str] = None) -> Path:
     """Atomically persist named arrays + a json header under ``key``."""
     assert "header" not in arrays, "reserved entry name"
     d = Path(cache_dir or DEFAULT_CACHE_DIR)
     d.mkdir(parents=True, exist_ok=True)
+    gc_stale_tmp(cache_dir, max_age_s=86400.0)
     final = d / f"{key}.npz"
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
     try:
@@ -97,6 +127,18 @@ def store_arrays(key: str, arrays: dict, header: dict,
         if os.path.exists(tmp):
             os.unlink(tmp)
     return final
+
+
+def drop_arrays(key: str, cache_dir: Optional[str] = None) -> bool:
+    """Remove a cached entry (best-effort); True if a file was deleted.
+    Used by the campaign engine to retire per-slice resume checkpoints
+    once the whole-campaign entry is durable."""
+    path = Path(cache_dir or DEFAULT_CACHE_DIR) / f"{key}.npz"
+    try:
+        path.unlink()
+        return True
+    except OSError:
+        return False
 
 
 # --------------------------------------------------------------- campaigns

@@ -267,6 +267,7 @@ class CampaignResult:
     elapsed_s: float                 # integration wall-clock (0 on cache hit)
     from_cache: bool = False
     n_launches: int = 1              # kernel launches this result took
+    n_resumed: int = 0               # launches restored from slice checkpoints
 
     @property
     def n_samples_total(self) -> int:
@@ -349,6 +350,16 @@ def _launch_spans(n_slices: int, slice_cells: int,
     return [(a, min(a + per, n_slices)) for a in range(0, n_slices, per)]
 
 
+def _slice_key(key: str, a: int, b: int, chunk: int, horizon: str) -> str:
+    """Content key of one launch span's raw crossing row (resume protocol,
+    DESIGN.md §13): derived from the whole-campaign key plus everything
+    that shapes the launch decomposition, so a resume with a different
+    split/horizon never matches a stale slice."""
+    return _cache.content_key({"campaign": key, "span": [int(a), int(b)],
+                               "chunk": int(chunk), "horizon": horizon,
+                               "kind": "slice-row7"})
+
+
 def run_campaign(
     p: DeviceParams,
     grid: CampaignGrid,
@@ -360,6 +371,10 @@ def run_campaign(
     chunk: int = EARLY_EXIT_CHUNK,
     max_cells_per_launch: Optional[int] = None,
     horizon: str = "pow2",
+    checkpoint: Optional[bool] = None,
+    max_retries: int = 2,
+    retry_backoff_s: float = 0.25,
+    on_slice_complete=None,
 ) -> CampaignResult:
     """Run (or cache-load) a full Monte-Carlo campaign.
 
@@ -386,6 +401,19 @@ def run_campaign(
     corner axis.  Single-launch variation campaigns additionally pad the
     *total* plane to a power-of-two bucket, so the corner count enters
     the compile key only through that logarithmic bucket.
+
+    Crash resume (DESIGN.md §13): multi-launch campaigns checkpoint each
+    completed launch's raw crossing row through the content-keyed cache
+    (``checkpoint=None`` means "on whenever caching is on and there is
+    more than one launch"), so a killed process re-runs only the launches
+    it never finished — and because the stored row is the kernel's f32
+    output verbatim, the resumed assembly is bit-identical to an
+    uninterrupted run.  Slice checkpoints are retired once the
+    whole-campaign entry is durable.  A launch that fails to dispatch or
+    sync is retried up to ``max_retries`` times with exponential backoff
+    (``retry_backoff_s`` base).  ``on_slice_complete(i, n_launches)`` fires
+    after each freshly-integrated launch is checkpointed — the hook the
+    kill/resume tests use to die at a deterministic point.
     """
     assert backend in ("pallas", "ref"), backend
     spec = grid.variation
@@ -431,21 +459,71 @@ def run_campaign(
                 [lane_params, jnp.asarray(fill)], axis=1)
         launches = [(0, n_slices)]
 
-    # dispatch every launch before syncing on any of them: jax dispatch is
-    # async, so device compute and D2H transfers pipeline across launches
-    t0 = time.time()
-    outs = []
-    for a, b in launches:
+    ckpt = ((use_cache and len(launches) > 1) if checkpoint is None
+            else bool(checkpoint))
+
+    def span_cols(a: int, b: int) -> Tuple[int, int]:
         c0, c1 = a * slice_cells, b * slice_cells
         if spec is not None and len(launches) == 1:
             c1 = state.shape[1]              # include the total-bucket pad
-        outs.append(_integrate_sharded(
+        return c0, c1
+
+    def dispatch(a: int, b: int):
+        c0, c1 = span_cols(a, b)
+        return _integrate_sharded(
             state[:, c0:c1], seeds[c0:c1], sigma[c0:c1], budget[c0:c1],
             None if lane_params is None else lane_params[:, c0:c1],
             p=p, dt=grid.dt, n_steps=n_static,
             switch_threshold=float(grid.switch_threshold), backend=backend,
-            n_dev=_usable_devices(c1 - c0, devices), chunk=int(chunk)))
-    rows = [np.asarray(jax.block_until_ready(o))[7] for o in outs]
+            n_dev=_usable_devices(c1 - c0, devices), chunk=int(chunk))
+
+    # dispatch every launch before syncing on any of them: jax dispatch is
+    # async, so device compute and D2H transfers pipeline across launches.
+    # Checkpointed launches restore their raw f32 crossing row instead of
+    # dispatching at all; a failed dispatch is deferred to the sync loop's
+    # retry ladder rather than aborting the other launches' overlap.
+    t0 = time.time()
+    rows: List[Optional[np.ndarray]] = [None] * len(launches)
+    outs: List[Optional[object]] = [None] * len(launches)
+    n_resumed = 0
+    for i, (a, b) in enumerate(launches):
+        if ckpt:
+            c0, c1 = span_cols(a, b)
+            hit = _cache.load_arrays(_slice_key(key, a, b, chunk, horizon),
+                                     cache_dir)
+            if (hit is not None and "row7" in hit
+                    and hit["row7"].shape == (c1 - c0,)):
+                rows[i] = hit["row7"]
+                n_resumed += 1
+                continue
+        try:
+            outs[i] = dispatch(a, b)
+        except Exception:                    # retried in the sync loop
+            outs[i] = None
+    for i, (a, b) in enumerate(launches):
+        if rows[i] is not None:
+            continue
+        attempt = 0
+        while True:
+            try:
+                if outs[i] is None:
+                    outs[i] = dispatch(a, b)
+                rows[i] = np.asarray(jax.block_until_ready(outs[i]))[7]
+                break
+            except Exception:
+                outs[i] = None
+                if attempt >= max_retries:
+                    raise
+                time.sleep(retry_backoff_s * (2.0 ** attempt))
+                attempt += 1
+        if ckpt:
+            _cache.store_arrays(
+                _slice_key(key, a, b, chunk, horizon), {"row7": rows[i]},
+                header={"campaign": key, "span": [int(a), int(b)],
+                        "kind": "slice-row7"},
+                cache_dir=cache_dir)
+        if on_slice_complete is not None:
+            on_slice_complete(i, len(launches))
     elapsed = time.time() - t0
 
     # clip the quantized-horizon sentinel (n_static) back to the grid's
@@ -469,5 +547,12 @@ def run_campaign(
                              "grid": dataclasses.asdict(grid),
                              "backend": backend},
                      cache_dir=cache_dir)
+    if ckpt:
+        # the whole-campaign entry is durable (or caching is off and the
+        # result is in hand) — retire the per-slice resume checkpoints
+        for a, b in launches:
+            _cache.drop_arrays(_slice_key(key, a, b, chunk, horizon),
+                               cache_dir)
     return CampaignResult(grid=grid, backend=backend, crossing_time=crossing,
-                          elapsed_s=elapsed, n_launches=len(launches))
+                          elapsed_s=elapsed, n_launches=len(launches),
+                          n_resumed=n_resumed)

@@ -20,6 +20,10 @@
               routed through the analog MVM via the linear-interception
               hook, fused fake-analog fast path + weight-programming cache
               (DESIGN.md §12)
+  faults    — hard-fault injection: stuck-at / dead-line / endurance-wear
+              defect planes via the counter-RNG (rates are data, not
+              compile keys), repair policies (spare lines, pair masking,
+              ECC) and CRN-paired degradation studies (DESIGN.md §13)
 """
 from repro.imc.cpu_model import CPUModel, CORTEX_A72  # noqa: F401
 from repro.imc.workloads import WORKLOADS, Workload  # noqa: F401
@@ -44,6 +48,9 @@ _MODEL_ANALOG_EXPORTS = ("ModelAccuracyReport", "fake_analog_matmul",
                          "param_tree_hash", "model_forward_logits",
                          "analog_model_logits", "model_accuracy",
                          "model_accuracy_surface", "logit_metrics")
+_FAULTS_EXPORTS = ("FaultSpec", "RepairPolicy", "REPAIR_NONE", "REPAIR_SPARE",
+                   "REPAIR_SPARE_ECC", "REPAIR_POLICIES", "apply_repair",
+                   "fault_code_plane", "column_ok_plane")
 _READ_PATH_EXPORTS = ("ReadDisturbResult", "DisturbModel", "RetentionResult",
                       "SenseYieldResult", "SizedRead", "MeasuredRead",
                       "RefreshPolicy", "read_disturb_campaign",
@@ -75,6 +82,10 @@ def __getattr__(name):
         from repro.imc import write_path
 
         return getattr(write_path, name)
+    if name in _FAULTS_EXPORTS:
+        from repro.imc import faults
+
+        return getattr(faults, name)
     if name in _READ_PATH_EXPORTS:
         from repro.imc import read_path
 

@@ -61,6 +61,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.circuit.bitline import BitlineParams, cell_conductance, column_ir_drop
 from repro.core.params import (AFMTJ_PARAMS, MTJ_PARAMS, DeviceParams,
                                VariationSpec)
+from repro.imc import faults as hard_faults
+from repro.imc.faults import FaultSpec, RepairPolicy
 from repro.kernels.bitline_mac import bitline_mac_pallas
 from repro.kernels.ops import _default_interpret
 from repro.kernels.xnor_gemm import xnor_gemm_pallas
@@ -90,6 +92,13 @@ class AnalogConfig:
     # junction conductance — same spec, same counter-RNG streams as the
     # write-path and campaign-engine variation planes.
     variation: Optional[VariationSpec] = None
+    # Hard-defect model (DESIGN.md §13): stuck-at / dead-line / wear fault
+    # planes drawn by ``imc.faults`` — presence of a spec switches the
+    # fault machinery on (an all-zero-rate spec is the empty defect map,
+    # bit-identical to ``None``), and the optional repair policy transforms
+    # the defect map the way the array's repair controller would.
+    faults: Optional[FaultSpec] = None
+    repair: Optional[RepairPolicy] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +193,14 @@ def program_weights(
     else:
         g_pos, g_neg = tgt_pos, tgt_neg
 
+    if cfg.faults is not None and cfg.faults.drift_sigma > 0.0:
+        # slow conductance relaxation of the programmed targets; hard fault
+        # codes and write-verify floors override it below
+        g_pos = g_pos * hard_faults.drift_factors(
+            cfg.faults, w.shape[0], w.shape[1], negative=False)
+        g_neg = g_neg * hard_faults.drift_factors(
+            cfg.faults, w.shape[0], w.shape[1], negative=True)
+
     if cfg.write_ber > 0.0:
         # residual write errors (imc.write_path, DESIGN.md §7): a cell whose
         # write-verify attempt budget ran out never left the erased state,
@@ -196,6 +213,18 @@ def program_weights(
         g_pos = jnp.where(fail_pos, g_ap_eff, g_pos)
         g_neg = jnp.where(fail_neg, g_ap_eff, g_neg)
 
+    col_ok = None
+    if cfg.faults is not None:
+        # hard defects (DESIGN.md §13), applied *before* IR drop so stuck-on
+        # shorts load their columns and dead pairs unload theirs — exactly
+        # mirroring the fused fake-analog decode order (floor -> stuck-on
+        # -> dead inside ``pos_neg_conductance``)
+        code, col_ok = cfg.faults.planes(w.shape[0], w.shape[1])
+        if cfg.repair is not None:
+            code, col_ok = hard_faults.apply_repair(code, col_ok, cfg.repair)
+        g_pos, g_neg = hard_faults.apply_cell_faults(
+            code, g_pos, g_neg, g_off=g_ap_eff, g_on=g_ap_eff + g_fs)
+
     att_mean = 1.0
     if cfg.ir_drop:
         att_pos = column_ir_drop(jnp.sum(g_pos, axis=0), bl)
@@ -203,6 +232,18 @@ def program_weights(
         g_pos = g_pos * att_pos[None, :]
         g_neg = g_neg * att_neg[None, :]
         att_mean = float(0.5 * (jnp.mean(att_pos) + jnp.mean(att_neg)))
+
+    if col_ok is not None:
+        # dead bit-line drivers: their columns read zero on both arrays and
+        # the decode gain calibrates over *live* columns only
+        g_pos = g_pos * col_ok[None, :]
+        g_neg = g_neg * col_ok[None, :]
+        if cfg.ir_drop:
+            # same association as the no-fault mean so an all-live plane is
+            # bit-identical: 0.5 * (sum_p/live + sum_n/live)
+            live = max(float(jnp.sum(col_ok)), 1.0)
+            att_mean = float(0.5 * (jnp.sum(att_pos * col_ok) / live
+                                    + jnp.sum(att_neg * col_ok) / live))
 
     g_diff = g_pos - g_neg
     g_rms = float(jnp.sqrt(jnp.mean(g_diff * g_diff)))

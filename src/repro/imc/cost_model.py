@@ -38,6 +38,7 @@ from typing import TYPE_CHECKING, Optional, Sequence
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle / lazy-JAX guard
     from repro.configs.base import ArchConfig
+    from repro.imc.faults import FaultSpec, RepairPolicy
     from repro.imc.read_path import RefreshPolicy
 
 TECHNOLOGIES = ("afmtj", "mtj", "cpu")
@@ -189,6 +190,7 @@ class DeviceCostModel:
     t_write_op: float = 0.0
     write_attempts: float = 1.0
     refresh_interval: float = math.inf
+    array_yield: float = 1.0            # P(array usable) under fault/repair
 
     def step_cost(self, c: StepCounts) -> StepCost:
         t = (c.mac_weights * self.t_mac
@@ -237,6 +239,8 @@ def imc_cost_model(
     offset_sigma: float = 0.0,
     refresh: Optional["RefreshPolicy"] = None,
     resident_bytes: Optional[float] = None,
+    faults: Optional["FaultSpec"] = None,
+    repair: Optional["RepairPolicy"] = None,
 ) -> DeviceCostModel:
     """AFMTJ/MTJ crossbar pricing from the measured hierarchy timings.
 
@@ -252,10 +256,17 @@ def imc_cost_model(
     ``refresh`` (+ ``resident_bytes``, the programmed footprint) charges a
     measured scrub policy (DESIGN.md §10): every op is stretched by the
     scrub duty cycle and the scrub pass energy becomes a standing rate.
+
+    ``faults`` (+ optional ``repair``) charges the hard-defect model
+    (DESIGN.md §13) the same way: arrays whose defects exceed the repair
+    capacity are fused out, so effective parallelism shrinks by the array
+    yield (latency x overhead/yield) and every op pays the spare-line/ECC
+    cell overhead in area->energy.  Defaults off keep nominal bit-for-bit.
     """
     from repro.imc.hierarchy import build_hierarchy
     from repro.imc.mapping import (ADC_E_PER_COL, ADC_T, CELLS_PER_WEIGHT_8B,
-                                   IMC_PARALLEL_ARRAYS, XBAR)
+                                   IMC_PARALLEL_ARRAYS, XBAR,
+                                   fault_cost_factors)
 
     hier = build_hierarchy(kind, v_write=v_write, wer_target=wer_target,
                            write_percentile=write_percentile,
@@ -290,14 +301,18 @@ def imc_cost_model(
         e_pass = resident_bytes * 8.0 * (tm.e_read_bit + tm.e_write_bit)
         e_rate = e_pass / interval
 
+    array_yield, cell_ovh, fault_stretch = fault_cost_factors(faults, repair)
+
     return DeviceCostModel(
         kind=kind,
-        t_mac=t_mac * duty_stretch, e_mac=e_mac,
-        t_kv_write=t_kv_write * duty_stretch, e_kv_write=e_kv_write,
-        t_kv_read=t_kv_read * duty_stretch, e_kv_read=e_kv_read,
+        t_mac=t_mac * duty_stretch * fault_stretch, e_mac=e_mac * cell_ovh,
+        t_kv_write=t_kv_write * duty_stretch * fault_stretch,
+        e_kv_write=e_kv_write * cell_ovh,
+        t_kv_read=t_kv_read * duty_stretch * fault_stretch,
+        e_kv_read=e_kv_read * cell_ovh,
         e_standing_rate=e_rate,
         t_write_op=tm.t_write, write_attempts=tm.write_attempts,
-        refresh_interval=interval,
+        refresh_interval=interval, array_yield=array_yield,
     )
 
 

@@ -26,6 +26,7 @@ import math
 from typing import TYPE_CHECKING, Dict, Optional
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (read_path -> circuit)
+    from repro.imc.faults import FaultSpec, RepairPolicy
     from repro.imc.read_path import RefreshPolicy
 
 from repro.imc.cpu_model import CORTEX_A72, CPUModel
@@ -54,6 +55,9 @@ class SystemResult:
     t_refresh: float = 0.0
     e_refresh: float = 0.0
     refresh_interval: float = math.inf
+    # hard-fault provenance (DESIGN.md §13): fraction of arrays the repair
+    # budget salvages.  1.0 when no FaultSpec is active (inert default).
+    array_yield: float = 1.0
 
     @property
     def speedup(self) -> float:
@@ -67,6 +71,8 @@ class SystemResult:
 def evaluate_workload(
     w: Workload, hier: IMCHierarchy, cpu: CPUModel = CORTEX_A72,
     refresh: Optional["RefreshPolicy"] = None,
+    faults: Optional["FaultSpec"] = None,
+    repair: Optional["RepairPolicy"] = None,
 ) -> SystemResult:
     t_cpu, e_cpu = cpu.kernel_time_energy(
         w.n_elems,
@@ -119,12 +125,25 @@ def evaluate_workload(
         e_refresh = (t_imc / interval) * e_pass
         e_imc = e_imc + e_refresh
 
+    # --- hard-fault / repair overhead (DESIGN.md §13) ----------------------
+    # Repair policies cost spare-line area + ECC cells (energy overhead on
+    # every cell access) and the residual defective-array fraction stretches
+    # latency: work mapped to condemned arrays must be re-run on survivors.
+    array_yield = 1.0
+    if faults is not None:
+        from repro.imc.mapping import fault_cost_factors
+
+        array_yield, cell_ovh, fault_stretch = fault_cost_factors(
+            faults, repair)
+        t_imc = t_imc * fault_stretch
+        e_imc = e_imc * cell_ovh
+
     return SystemResult(w.name, t_cpu, e_cpu, t_imc, e_imc,
                         t_write_op=tm.t_write,
                         write_attempts=tm.write_attempts,
                         write_residual_ber=tm.write_residual_ber,
                         t_refresh=t_refresh, e_refresh=e_refresh,
-                        refresh_interval=interval)
+                        refresh_interval=interval, array_yield=array_yield)
 
 
 def evaluate_system(kind: str = "afmtj", v_write: float = 1.0,
@@ -133,6 +152,8 @@ def evaluate_system(kind: str = "afmtj", v_write: float = 1.0,
                     read_percentile: float | None = None,
                     offset_sigma: float = 0.0,
                     refresh: Optional["RefreshPolicy"] = None,
+                    faults: Optional["FaultSpec"] = None,
+                    repair: Optional["RepairPolicy"] = None,
                     ) -> Dict[str, SystemResult]:
     """``wer_target`` (e.g. 1e-2) sizes write pulses from the thermal-tail
     Monte-Carlo campaign instead of the mean switching time;
@@ -142,13 +163,16 @@ def evaluate_system(kind: str = "afmtj", v_write: float = 1.0,
     write stage dominates the pipe even harder than the nominal pulse.
     ``read_percentile``/``offset_sigma`` do the same for the read side
     (``imc.read_path``, DESIGN.md §10), and ``refresh`` charges a measured
-    retention/disturb-derived scrub policy into the comparison.  All
-    defaults off keeps the nominal Fig. 4 numbers bit-for-bit."""
+    retention/disturb-derived scrub policy into the comparison.
+    ``faults``/``repair`` (DESIGN.md §13) charge the hard-fault repair
+    yield/overhead model into ``t_imc``/``e_imc``.  All defaults off keeps
+    the nominal Fig. 4 numbers bit-for-bit."""
     hier = build_hierarchy(kind, v_write=v_write, wer_target=wer_target,
                            write_percentile=write_percentile,
                            read_percentile=read_percentile,
                            offset_sigma=offset_sigma)
-    return {name: evaluate_workload(w, hier, refresh=refresh)
+    return {name: evaluate_workload(w, hier, refresh=refresh,
+                                    faults=faults, repair=repair)
             for name, w in WORKLOADS.items()}
 
 

@@ -25,11 +25,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.imc.cpu_model import CORTEX_A72, CPUModel
 from repro.imc.hierarchy import IMCHierarchy, build_hierarchy
+
+if TYPE_CHECKING:  # pure-math yield model below; no jnp import at runtime
+    from repro.imc.faults import FaultSpec, RepairPolicy
 
 XBAR = 512                      # crossbar dimension (MM-level subarrays)
 IMC_PARALLEL_ARRAYS = 1024      # arrays operating concurrently at MM (PiM)
@@ -101,6 +104,85 @@ def map_all(archs: Dict[str, ArchConfig]) -> Dict[str, Dict[str, ArchMapResult]]
         out[kind] = {name: map_arch_decode(cfg, hier)
                      for name, cfg in archs.items()}
     return out
+
+
+# --- hard-fault repair: capacity yield model + area/energy overheads --------
+#
+# ``imc.faults`` draws the defect planes the functional paths compute with;
+# this block is the closed-form companion the *cost* model charges
+# (DESIGN.md §13): the probability an XBAR x XBAR array's defects fit the
+# repair capacity (arrays that don't are fused out — their work re-runs on
+# survivors, stretching latency by 1/yield), and the spare-line / ECC cell
+# overheads every array pays whether or not it uses them.
+
+def _poisson_cdf(k: int, lam: float) -> float:
+    """P(X <= k) for X ~ Poisson(lam) — iterative, no scipy."""
+    if lam <= 0.0:
+        return 1.0
+    term = math.exp(-lam)
+    total = term
+    for i in range(1, int(k) + 1):
+        term *= lam / i
+        total += term
+    return min(total, 1.0)
+
+
+def repair_yield(faults: "FaultSpec", policy: Optional["RepairPolicy"] = None,
+                 xbar: int = XBAR) -> float:
+    """P(an XBAR x XBAR differential array is usable under ``policy``).
+
+    A row is defective if its word-line driver is dead or it holds more
+    stuck differential pairs than the row can absorb (ECC corrects up to
+    ``ecc_cells_per_row``; pair masking absorbs the rest at bounded
+    accuracy cost — without masking, ONE uncorrected stuck pair condemns
+    the row, which is why the no-repair yield collapses).  Defective
+    row/column counts are Poisson-approximated and must fit the spare
+    capacity; the array yield is the product of both fits.
+    """
+    from repro.imc.faults import REPAIR_NONE
+
+    pol = policy or REPAIR_NONE
+    p_cell = min(faults.cell_fault_rate, 1.0)
+    p_pair = 1.0 - (1.0 - p_cell) ** 2
+    if pol.mask_pairs:
+        p_row_cells = 0.0          # masked pairs never condemn a row
+    else:
+        lam_pair = xbar * p_pair
+        p_row_cells = 1.0 - _poisson_cdf(pol.ecc_cells_per_row, lam_pair)
+    p_row = min(faults.dead_row_rate
+                + (1.0 - faults.dead_row_rate) * p_row_cells, 1.0)
+    y_rows = _poisson_cdf(pol.spare_rows, xbar * p_row)
+    y_cols = _poisson_cdf(pol.spare_cols, xbar * faults.dead_col_rate)
+    return y_rows * y_cols
+
+
+def repair_cell_overhead(policy: Optional["RepairPolicy"] = None,
+                         xbar: int = XBAR) -> float:
+    """Cell/area factor a repaired array pays: spare lines plus the ECC
+    side-table (9 cells per correctable entry: 8-bit value + valid flag)."""
+    from repro.imc.faults import REPAIR_NONE
+
+    pol = policy or REPAIR_NONE
+    area = (1.0 + pol.spare_rows / xbar) * (1.0 + pol.spare_cols / xbar)
+    ecc = 1.0 + 9.0 * pol.ecc_cells_per_row / xbar
+    return area * ecc
+
+
+def fault_cost_factors(faults: Optional["FaultSpec"],
+                       policy: Optional["RepairPolicy"] = None,
+                       xbar: int = XBAR) -> Tuple[float, float, float]:
+    """(array_yield, cell_overhead, latency_stretch) for the cost model.
+
+    Latency stretches by overhead/yield: dead arrays drop out of the
+    parallel pool and their tiles re-run on survivors; the yield floor
+    (1e-3) caps the stretch at 1000x so a hopeless (rate, policy) point
+    reports a finite — obviously unusable — number instead of inf.
+    """
+    if faults is None or not faults.any_faults:
+        return 1.0, 1.0, 1.0
+    y = repair_yield(faults, policy, xbar)
+    ovh = repair_cell_overhead(policy, xbar)
+    return y, ovh, ovh / max(y, 1e-3)
 
 
 # --- functional read path: run the decode GEMV through the Pallas kernels ---

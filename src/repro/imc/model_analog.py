@@ -52,10 +52,12 @@ from repro.circuit.bitline import BitlineParams, cell_conductance, column_ir_dro
 from repro.configs.base import ArchConfig
 from repro.configs.registry import get_arch, smoke_config
 from repro.core.params import PROCESS_CORNERS, VariationSpec
+from repro.imc import faults as hard_faults
 from repro.imc.analog_pipeline import (AnalogConfig, ProgrammedArray,
                                        _device_for, _resolved_variation,
                                        analog_matmul, binary_matmul,
                                        program_weights)
+from repro.imc.faults import FaultSpec, RepairPolicy
 from repro.kernels.fake_analog import (ROW_ATT_NEG, ROW_ATT_POS, ROW_DECODE,
                                        ROW_G_AP, ROW_G_FS, ROW_G_SCALE,
                                        ROW_I_MAX, ROW_R_ACCESS, AUX_ROWS,
@@ -86,7 +88,8 @@ def _round_2sig(v: jnp.ndarray) -> jnp.ndarray:
 def _fake_mvm_body(x, w, bl: BitlineParams, scal: Dict[str, jnp.ndarray], *,
                    adc_bits: int, apply_fet: bool, use_fail: bool,
                    ir_drop: bool, has_imax: bool, decode: bool,
-                   interpret: bool):
+                   interpret: bool, use_faults: bool = False,
+                   repair: Optional[RepairPolicy] = None):
     """Traced fake-analog ``x @ w``: operand preamble + fused kernel.
 
     Everything numeric mirrors ``program_weights`` / ``kernel_operands`` /
@@ -112,18 +115,42 @@ def _fake_mvm_body(x, w, bl: BitlineParams, scal: Dict[str, jnp.ndarray], *,
     else:
         fail = jnp.zeros_like(wn)
 
+    col_ok = None
+    if use_faults:
+        # hard-defect planes (DESIGN.md §13): rates + seed arrive as traced
+        # scalars, so a fault-rate sweep is pure data — 0 new compiles.  The
+        # repair policy IS a compile key (it restructures the trace).  Fault
+        # bits are disjoint from the write-ber bits, so + is bitwise OR.
+        code = hard_faults.fault_code_plane(
+            k_rows, n_cols, seed=scal["f_seed"], stuck_on=scal["f_on"],
+            stuck_off=scal["f_off"], dead_row=scal["f_drow"])
+        col_ok = hard_faults.column_ok_plane(
+            n_cols, seed=scal["f_seed"], dead_col=scal["f_dcol"])
+        code, col_ok = hard_faults.apply_repair(code, col_ok, repair)
+        fail = fail + code
+
     # column statistics (IR planes, ADC sizing) reduce over the same cell
     # conductances the kernel replays — shared helper, fused reductions
     tp, tn = pos_neg_conductance(wn, fail, g_ap, g_fs, scal["g_scale"],
                                  scal["r_access"], apply_fet=apply_fet,
-                                 use_fail=use_fail)
+                                 use_fail=use_fail or use_faults)
     if ir_drop:
         att_p = column_ir_drop(jnp.sum(tp, axis=0), bl)
         att_n = column_ir_drop(jnp.sum(tn, axis=0), bl)
-        att_mean = 0.5 * (jnp.mean(att_p) + jnp.mean(att_n))
+        if col_ok is None:
+            att_mean = 0.5 * (jnp.mean(att_p) + jnp.mean(att_n))
+        else:
+            # dead bit lines read zero; the decode gain calibrates over
+            # live columns only (same association as the device path so an
+            # all-live plane stays bit-identical to the no-fault trace)
+            att_p = att_p * col_ok
+            att_n = att_n * col_ok
+            live = jnp.maximum(jnp.sum(col_ok), 1.0)
+            att_mean = 0.5 * (jnp.sum(att_p) / live + jnp.sum(att_n) / live)
     else:
-        att_p = jnp.ones((n_cols,), jnp.float32)
-        att_n = jnp.ones((n_cols,), jnp.float32)
+        ok = jnp.float32(1.0) if col_ok is None else col_ok
+        att_p = jnp.ones((n_cols,), jnp.float32) * ok
+        att_n = jnp.ones((n_cols,), jnp.float32) * ok
         att_mean = jnp.float32(1.0)
 
     x_scale = jnp.max(jnp.abs(x))
@@ -150,19 +177,36 @@ def _fake_mvm_body(x, w, bl: BitlineParams, scal: Dict[str, jnp.ndarray], *,
                                              full(scal["r_access"]))
     aux = jnp.stack(rows)
     return fake_analog_mac_pallas(v, wn, fail, aux, adc_bits=adc_bits,
-                                  apply_fet=apply_fet, use_fail=use_fail,
+                                  apply_fet=apply_fet,
+                                  use_fail=use_fail or use_faults,
                                   interpret=interpret)
 
 
 @functools.lru_cache(maxsize=None)
 def _jitted_fake_mvm(adc_bits: int, apply_fet: bool, use_fail: bool,
                      ir_drop: bool, has_imax: bool, decode: bool,
-                     interpret: bool):
+                     interpret: bool, use_faults: bool = False,
+                     repair: Optional[RepairPolicy] = None):
     body = functools.partial(_fake_mvm_body, adc_bits=adc_bits,
                              apply_fet=apply_fet, use_fail=use_fail,
                              ir_drop=ir_drop, has_imax=has_imax,
-                             decode=decode, interpret=interpret)
+                             decode=decode, interpret=interpret,
+                             use_faults=use_faults, repair=repair)
     return jax.jit(body)
+
+
+def _fake_faults_mode(cfg: AnalogConfig) -> bool:
+    """Whether the fused path should trace the fault machinery in.  Presence
+    of a spec switches it on (an all-zero-rate spec is the empty defect map,
+    pinned bit-identical to ``faults=None``); drift is device-path only —
+    same contract as D2D sigma in ``_systematic_g_scale``."""
+    if cfg.faults is None:
+        return False
+    if cfg.faults.drift_sigma > 0.0:
+        raise NotImplementedError(
+            "fake-analog path models hard fault codes only; conductance "
+            "drift draws per-cell host-side factors — use mode='device'")
+    return True
 
 
 def _systematic_g_scale(cfg: AnalogConfig) -> Tuple[bool, float]:
@@ -185,6 +229,7 @@ def _fake_scalars(kind: str, cfg: AnalogConfig, bl: BitlineParams,
                   ) -> Dict[str, jnp.ndarray]:
     """The traced-scalar pack: same f32 roundings as ``program_weights``."""
     dev = _device_for(kind, cfg)
+    fs = cfg.faults
     g_p_eff = float(cell_conductance(jnp.asarray(1.0 / dev.r_parallel), bl))
     g_ap_eff = float(cell_conductance(jnp.asarray(1.0 / dev.r_antiparallel), bl))
     return {
@@ -197,6 +242,13 @@ def _fake_scalars(kind: str, cfg: AnalogConfig, bl: BitlineParams,
         "ber": jnp.float32(cfg.write_ber),
         "seed": jnp.int32(cfg.seed),
         "i_max": jnp.float32(0.0 if i_max is None else i_max),
+        # hard-fault plane knobs (DESIGN.md §13) — data, not compile keys,
+        # so a fault-rate sweep reuses one executable; zeros when no spec
+        "f_seed": jnp.uint32(0 if fs is None else fs.seed & 0xFFFFFFFF),
+        "f_on": jnp.float32(0.0 if fs is None else fs.stuck_on_rate),
+        "f_off": jnp.float32(0.0 if fs is None else fs.stuck_off_effective),
+        "f_drow": jnp.float32(0.0 if fs is None else fs.dead_row_rate),
+        "f_dcol": jnp.float32(0.0 if fs is None else fs.dead_col_rate),
     }
 
 
@@ -220,7 +272,8 @@ def fake_analog_matmul(
     scal = _fake_scalars(kind, cfg, bl, g_scale, i_max)
     interp = _default_interpret() if interpret is None else interpret
     fn = _jitted_fake_mvm(cfg.adc_bits, apply_fet, cfg.write_ber > 0.0,
-                          cfg.ir_drop, i_max is not None, decode, interp)
+                          cfg.ir_drop, i_max is not None, decode, interp,
+                          _fake_faults_mode(cfg), cfg.repair)
     return fn(x, w, bl, scal)
 
 
@@ -262,6 +315,10 @@ def programming_key(w, kind: str, cfg: AnalogConfig,
             "seed": spec.seed,
             "distribution": spec.distribution,
         },
+        "faults": (None if cfg.faults is None
+                   else dataclasses.asdict(cfg.faults)),
+        "repair": (None if cfg.repair is None
+                   else dataclasses.asdict(cfg.repair)),
         "bitline": dataclasses.asdict(bl),
     })
 
@@ -334,13 +391,17 @@ def _jitted_ref_forward(cfg: ArchConfig):
 
 @functools.lru_cache(maxsize=None)
 def _jitted_fake_forward(cfg: ArchConfig, adc_bits: int, apply_fet: bool,
-                         use_fail: bool, ir_drop: bool, interpret: bool):
+                         use_fail: bool, ir_drop: bool, interpret: bool,
+                         use_faults: bool = False,
+                         repair: Optional[RepairPolicy] = None):
     """Whole forward jitted with the fake-analog hook traced in: one XLA
-    executable per (arch, adc_bits) — TMR/corner/BER/seed arrive as data."""
+    executable per (arch, adc_bits[, repair policy]) — TMR/corner/BER/seed
+    and the fault rates arrive as data."""
     body = functools.partial(_fake_mvm_body, adc_bits=adc_bits,
                              apply_fet=apply_fet, use_fail=use_fail,
                              ir_drop=ir_drop, has_imax=False, decode=True,
-                             interpret=interpret)
+                             interpret=interpret, use_faults=use_faults,
+                             repair=repair)
 
     @jax.jit
     def run(params, tokens, scal):
@@ -382,7 +443,8 @@ def analog_model_logits(
     if mode == "fake":
         apply_fet, g_scale = _systematic_g_scale(acfg)
         fn = _jitted_fake_forward(cfg, acfg.adc_bits, apply_fet,
-                                  acfg.write_ber > 0.0, acfg.ir_drop, interp)
+                                  acfg.write_ber > 0.0, acfg.ir_drop, interp,
+                                  _fake_faults_mode(acfg), acfg.repair)
         # device constants are rows-independent (the FET series combination
         # has no wire term), so one scalar pack serves every layer
         scal = _fake_scalars(kind, acfg, BitlineParams(), g_scale, None)
@@ -420,6 +482,8 @@ class ModelAccuracyReport:
     ppl_ref: float                 # next-token perplexity, exact logits
     batch: int
     seq_len: int
+    fault_rate: float = 0.0        # headline hard-fault rate (FaultSpec.rate)
+    repair: str = "none"           # repair policy name
 
 
 def logit_metrics(ref_logits, ana_logits, tokens
@@ -490,11 +554,14 @@ def model_accuracy(
                               mode=mode, tie=tie, cache_dir=cache_dir)
     kl, match, ppl_a, ppl_r = logit_metrics(ref_logits, ana, tokens)
     tmr = acfg.tmr if acfg.tmr is not None else _device_for(kind, acfg).tmr
+    fspec = acfg.faults
+    frate = 0.0 if fspec is None else (fspec.rate or fspec.cell_fault_rate)
     return ModelAccuracyReport(
         arch=arch, kind=kind, mode=mode, adc_bits=acfg.adc_bits,
         tmr=float(tmr), corner=corner, write_ber=acfg.write_ber, kl=kl,
         token_match=match, ppl_analog=ppl_a, ppl_ref=ppl_r, batch=batch,
-        seq_len=seq_len)
+        seq_len=seq_len, fault_rate=float(frate),
+        repair="none" if acfg.repair is None else acfg.repair.name)
 
 
 def model_accuracy_surface(
@@ -505,24 +572,80 @@ def model_accuracy_surface(
     tmrs: Sequence[Optional[float]] = (None,),
     corners: Sequence[str] = ("tt",),
     write_bers: Sequence[float] = (0.0,),
+    fault_rates: Sequence[float] = (0.0,),
+    repair: Optional[RepairPolicy] = None,
     batch: int = 2,
     seq_len: int = 64,
     seed: int = 0,
     smoke: bool = True,
     cache_dir: Optional[str] = None,
 ) -> Tuple[ModelAccuracyReport, ...]:
-    """The model-level accuracy surface: full outer product of the four
-    non-ideality axes, model/params/reference set up once."""
+    """The model-level accuracy surface: full outer product of the
+    non-ideality axes, model/params/reference set up once.  The default
+    ``fault_rates=(0.0,)`` keeps the fault machinery out of the trace
+    entirely (bit-identical to pre-fault surfaces)."""
     state = _setup(arch, smoke, batch, seq_len, seed)
     out = []
-    for ber in write_bers:
-        for corner in corners:
-            for tmr in tmrs:
-                for bits in adc_bits:
-                    acfg = AnalogConfig(adc_bits=bits, tmr=tmr,
-                                        write_ber=ber, seed=seed)
-                    out.append(model_accuracy(
-                        arch, acfg, kind=kind, mode=mode, corner=corner,
-                        batch=batch, seq_len=seq_len, seed=seed, smoke=smoke,
-                        cache_dir=cache_dir, _setup_state=state))
+    for fr in fault_rates:
+        fspec = None if fr == 0.0 else FaultSpec.at_rate(float(fr), seed=seed)
+        for ber in write_bers:
+            for corner in corners:
+                for tmr in tmrs:
+                    for bits in adc_bits:
+                        acfg = AnalogConfig(
+                            adc_bits=bits, tmr=tmr, write_ber=ber, seed=seed,
+                            faults=fspec,
+                            repair=repair if fspec is not None else None)
+                        out.append(model_accuracy(
+                            arch, acfg, kind=kind, mode=mode, corner=corner,
+                            batch=batch, seq_len=seq_len, seed=seed,
+                            smoke=smoke, cache_dir=cache_dir,
+                            _setup_state=state))
     return tuple(out)
+
+
+def model_degradation_curves(
+    arch: str = "qwen2-0.5b",
+    kind: str = "afmtj",
+    rates: Sequence[float] = (0.0, 1e-3, 3e-3, 1e-2, 3e-2),
+    policies: Sequence[Optional[RepairPolicy]] = (None,
+                                                 hard_faults.REPAIR_SPARE),
+    adc_bits: int = 6,
+    mode: str = "fake",
+    batch: int = 2,
+    seq_len: int = 64,
+    seed: int = 0,
+    smoke: bool = True,
+    cache_dir: Optional[str] = None,
+) -> Tuple[ModelAccuracyReport, ...]:
+    """Graceful-degradation curves: model accuracy vs fault rate x repair
+    policy (DESIGN.md §13).  A ``FaultSpec`` is present at every point —
+    including rate 0 — so each policy's whole rate sweep shares ONE XLA
+    executable (rates are data; pinned in the ``fault`` bench), and the
+    counter-RNG keeps the defect maps CRN-paired across policies."""
+    state = _setup(arch, smoke, batch, seq_len, seed)
+    out = []
+    for pol in policies:
+        for r in rates:
+            acfg = AnalogConfig(
+                adc_bits=adc_bits, seed=seed,
+                faults=FaultSpec.at_rate(float(r), seed=seed), repair=pol)
+            out.append(model_accuracy(
+                arch, acfg, kind=kind, mode=mode, batch=batch,
+                seq_len=seq_len, seed=seed, smoke=smoke, cache_dir=cache_dir,
+                _setup_state=state))
+    return tuple(out)
+
+
+def degradation_knee(reports: Sequence[ModelAccuracyReport],
+                     min_token_match: float = 0.8) -> Dict[str, float]:
+    """Per repair policy, the largest swept fault rate still meeting the
+    accuracy bar — the knee where remapping stops saving accuracy.  (The
+    CRN monotone coupling makes accuracy-vs-rate monotone per policy, so
+    max-passing-rate is the knee.)"""
+    knees: Dict[str, float] = {}
+    for r in reports:
+        knees.setdefault(r.repair, 0.0)
+        if r.token_match >= min_token_match:
+            knees[r.repair] = max(knees[r.repair], r.fault_rate)
+    return knees

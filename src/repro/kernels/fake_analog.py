@@ -53,6 +53,28 @@ ROW_G_SCALE = 6     # systematic corner junction conductance factor 1/r_f
 ROW_R_ACCESS = 7    # access transistor on-resistance [Ohm]
 AUX_ROWS = 8
 
+# ``fail``-plane bit codes.  The plane is f32 (it rides the same operand
+# layout as the weight tile) carrying a bit-OR of small powers of two —
+# exact in f32 up to 127.  Bits 1/2 are the PR-3 write-verify fail masks;
+# bits 4..64 are the hard-fault codes drawn by ``imc.faults`` (stuck-at and
+# dead-line defects are *data*, not compile keys).
+FAIL_POS = 1        # write-verify fail: positive cell at the G_AP floor
+FAIL_NEG = 2        # write-verify fail: negative cell at the G_AP floor
+FAULT_POS_OFF = 4   # hard stuck-at-G_off: positive cell pinned at G_AP
+FAULT_NEG_OFF = 8   # hard stuck-at-G_off: negative cell pinned at G_AP
+FAULT_POS_ON = 16   # hard stuck-at-G_on: positive cell pinned at G_AP+G_FS
+FAULT_NEG_ON = 32   # hard stuck-at-G_on: negative cell pinned at G_AP+G_FS
+FAULT_DEAD = 64     # dead differential pair (dead row driver / repair mask)
+FAIL_CODE_MAX = 127
+
+
+def fail_bit(code, bit):
+    """True where integer bit ``bit`` is set in the f32 ``fail`` code plane.
+
+    Pure f32 arithmetic (floor/mod) so it lowers identically inside the
+    Pallas tile, the jnp oracle, and the traced preamble."""
+    return jnp.floor(code * (1.0 / bit)) % 2.0 >= 1.0
+
 
 def pos_neg_conductance(wn, fail, g_ap, g_fs, g_scale, r_access, *,
                         apply_fet: bool, use_fail: bool):
@@ -69,10 +91,21 @@ def pos_neg_conductance(wn, fail, g_ap, g_fs, g_scale, r_access, *,
 
         tp, tn = fet(tp), fet(tn)
     if use_fail:
-        # fail encodes both masks: bit 0 = positive cell, bit 1 = negative
+        # Decode order fixes the fault priority: G_AP floors (write-verify
+        # fails + stuck-off), then stuck-on overrides, then dead pairs kill
+        # the cell outright.  For legacy codes {0,1,2,3} this is bit-for-bit
+        # the old two-way decode (bit 1 <-> fail in {1,3}; bit 2 <-> >= 2).
         g_ap_b = jnp.broadcast_to(g_ap, tp.shape)
-        tp = jnp.where((fail == 1.0) | (fail == 3.0), g_ap_b, tp)
-        tn = jnp.where(fail >= 2.0, g_ap_b, tn)
+        g_on_b = jnp.broadcast_to(g_ap + g_fs, tp.shape)
+        tp = jnp.where(fail_bit(fail, FAIL_POS) | fail_bit(fail, FAULT_POS_OFF),
+                       g_ap_b, tp)
+        tn = jnp.where(fail_bit(fail, FAIL_NEG) | fail_bit(fail, FAULT_NEG_OFF),
+                       g_ap_b, tn)
+        tp = jnp.where(fail_bit(fail, FAULT_POS_ON), g_on_b, tp)
+        tn = jnp.where(fail_bit(fail, FAULT_NEG_ON), g_on_b, tn)
+        dead = fail_bit(fail, FAULT_DEAD)
+        tp = jnp.where(dead, 0.0, tp)
+        tn = jnp.where(dead, 0.0, tn)
     return tp, tn
 
 
@@ -114,7 +147,7 @@ def _fake_kernel(v_ref, w_ref, fail_ref, aux_ref, o_ref, acc_ref, *, nk: int,
 def fake_analog_mac_pallas(
     v: jnp.ndarray,               # (M, K) read voltages (batch x rows)
     wn: jnp.ndarray,              # (K, N) normalized weights in [-1, 1]
-    fail: jnp.ndarray,            # (K, N) f32 write-fail code {0,1,2,3}
+    fail: jnp.ndarray,            # (K, N) f32 fail/fault bit codes [0, 127]
     aux: jnp.ndarray,             # (8, N) f32 aux plane (ROW_* layout)
     adc_bits: int = 0,
     apply_fet: bool = False,

@@ -227,3 +227,74 @@ def simulate_serving(prices, trace: Trace, n_slots: int = 8,
     if method == "steps":
         return _simulate_steps(prices, trace, n_slots, engine=engine)
     raise ValueError(f"unknown method {method!r}; 'events' or 'steps'")
+
+
+# --- graceful degradation: SLO attainment vs hard-fault rate ----------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultSLOPoint:
+    """One (repair policy, fault rate) cell of the serving degradation
+    curve (DESIGN.md §13): the *healthy* device's trace and SLO served at
+    the faulty device's token prices."""
+
+    technology: str
+    fault_rate: float
+    repair: str                  # policy name ("none" when unrepaired)
+    slo_attainment: float
+    array_yield: float
+    ttft_p99_s: float
+    tpot_p99_s: float
+    tokens_per_joule: float
+
+
+def fault_slo_curve(kind: str = "afmtj",
+                    rates=(0.0, 1e-3, 3e-3, 1e-2),
+                    policies=(None,), *, arch: str = "qwen2-0.5b",
+                    rho: float = 0.7, n_requests: int = 2000,
+                    n_slots: int = 8, seed: int = 0) -> list:
+    """Serving SLO attainment vs fault rate × repair policy.
+
+    The offered load, the Poisson trace, and the SLO are all fixed at the
+    *healthy* device's prices — the question is how much of the committed
+    service level a degrading part can still honor, not how a re-provisioned
+    system would behave.  Each (policy, rate) point then re-prices the SAME
+    trace with the fault-charged cost model (``imc_cost_model(faults=...)``:
+    repair-yield latency stretch + ECC/spare energy overhead) and replays it
+    through the event-driven simulator.  Rate 0 is bit-identical to the
+    healthy run for every policy (``fault_cost_factors`` is (1,1,1) when no
+    fault plane is active), so each curve starts at the same attainment.
+
+    Imports stay local: the serving stack is JAX-free until a fault spec
+    actually enters the picture.
+    """
+    from repro.configs.registry import ARCHS
+    from repro.imc.cost_model import device_cost_model, per_token_counts
+    from repro.imc.faults import FaultSpec
+    from repro.launch.report import SLO, build_report
+    from repro.launch.traffic import (CHAT_OUTPUTS, CHAT_PROMPTS,
+                                      poisson_at_load)
+
+    tc = per_token_counts(ARCHS[arch])
+    healthy = device_cost_model(kind).token_prices(tc)
+    trace = poisson_at_load(healthy, rho, n_requests, n_slots,
+                            seed=seed).trace()
+    slo = SLO.normalized(healthy, CHAT_PROMPTS, CHAT_OUTPUTS, n_slots)
+    points = []
+    for pol in policies:
+        for r in rates:
+            spec = FaultSpec.at_rate(float(r), seed=seed)
+            model = device_cost_model(kind, faults=spec, repair=pol)
+            res = simulate_serving(model.token_prices(tc), trace,
+                                   n_slots=n_slots)
+            rep = build_report(kind, res.ttft_s, res.tpot_s, res.sim_time_s,
+                               res.energy_j, res.prefill_tokens,
+                               res.decode_tokens, offered_load=rho, slo=slo,
+                               busy_s=res.busy_s)
+            points.append(FaultSLOPoint(
+                technology=kind, fault_rate=float(r),
+                repair="none" if pol is None else pol.name,
+                slo_attainment=float(rep.slo_attainment),
+                array_yield=float(model.array_yield),
+                ttft_p99_s=rep.ttft_p99_s, tpot_p99_s=rep.tpot_p99_s,
+                tokens_per_joule=rep.tokens_per_joule))
+    return points

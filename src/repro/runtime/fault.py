@@ -45,12 +45,34 @@ class FaultTolerantLoop:
         self.save_every = save_every
         self.preempted = False
         self._old_handler = None
+        self._installed = False
 
     def install_sigterm(self):
         def handler(signum, frame):
             self.preempted = True
 
         self._old_handler = signal.signal(signal.SIGTERM, handler)
+        self._installed = True
+
+    def uninstall_sigterm(self):
+        """Restore the SIGTERM disposition that ``install_sigterm`` replaced.
+
+        Without this, a loop that finishes (or a test that installs a
+        handler) leaves the process's SIGTERM behavior permanently pointing
+        at a dead loop object — the next preemption flips a flag nobody
+        reads instead of terminating the process."""
+        if self._installed:
+            signal.signal(signal.SIGTERM, self._old_handler)
+            self._old_handler = None
+            self._installed = False
+
+    def __enter__(self):
+        self.install_sigterm()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.uninstall_sigterm()
+        return False
 
     def run(
         self,

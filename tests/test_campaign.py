@@ -1,5 +1,12 @@
-"""Campaign engine tests: thermal kernel parity, WER physics, caching."""
+"""Campaign engine tests: thermal kernel parity, WER physics, caching,
+crash-safe cache writes, and crash-resumable multi-launch campaigns."""
 import dataclasses
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -226,6 +233,167 @@ def test_campaign_cache_corrupt_entry_is_miss(tmp_path):
     (tmp_path / f"{key}.npz").write_bytes(b"not an npz")
     r = run_campaign(AFMTJ_PARAMS, grid, cache_dir=str(tmp_path))
     assert not r.from_cache           # corrupt entry read as miss, re-run
+
+
+# ------------------------------------------------- crash safety / resume
+REPO = Path(__file__).resolve().parents[1]
+_ENV = {**os.environ, "PYTHONPATH": str(REPO / "src")}
+
+
+def _resume_grid():
+    return CampaignGrid(voltages=(0.6, 1.2), pulse_widths=(120e-12, 250e-12),
+                        temperatures=(300.0, 350.0, 400.0), n_samples=16,
+                        dt=0.1e-12, seed=0)
+
+
+def test_store_arrays_kill_mid_write_never_corrupts(tmp_path):
+    """A process SIGKILLed mid-``store_arrays`` leaves only a ``.tmp``
+    dropping — the atomic rename never ran, so loads stay clean misses and
+    the stale-tmp sweep reclaims the disk."""
+    from repro.campaign.cache import gc_stale_tmp, load_arrays, store_arrays
+
+    child = textwrap.dedent("""
+        import os, signal, sys
+        import numpy as np
+        from repro.campaign import cache
+
+        def killer(f, **kw):
+            f.write(b"partial write, then the lights go out")
+            f.flush()
+            os.kill(os.getpid(), signal.SIGKILL)
+
+        np.savez_compressed = killer
+        cache.store_arrays("deadbeef", {"a": np.ones(8)}, {},
+                           cache_dir=sys.argv[1])
+    """)
+    r = subprocess.run([sys.executable, "-c", child, str(tmp_path)],
+                       env=_ENV, capture_output=True, text=True, timeout=120)
+    assert r.returncode == -signal.SIGKILL, r.stderr
+    leftovers = sorted(p.name for p in tmp_path.iterdir())
+    assert leftovers and all(n.endswith(".tmp") for n in leftovers), leftovers
+    assert load_arrays("deadbeef", cache_dir=str(tmp_path)) is None
+    # fresh droppings survive the default age guard (a live writer may own
+    # them); max_age_s=0 reclaims them
+    assert gc_stale_tmp(str(tmp_path)) == 0
+    assert gc_stale_tmp(str(tmp_path), max_age_s=0.0) == len(leftovers)
+    assert not any(tmp_path.iterdir())
+    # and the store works normally afterwards
+    store_arrays("deadbeef", {"a": np.arange(3.0)}, {"k": 1},
+                 cache_dir=str(tmp_path))
+    got = load_arrays("deadbeef", cache_dir=str(tmp_path))
+    np.testing.assert_array_equal(got["a"], np.arange(3.0))
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_campaign_kill_resume_bit_identical(tmp_path):
+    """Acceptance pin: a campaign SIGKILLed after its first launch resumes
+    from the slice checkpoints and assembles the crossing tensor
+    bit-identically to an uninterrupted run (subprocess kill, real files)."""
+    from repro.campaign.grid import bucket_cells
+
+    grid = _resume_grid()
+    per = bucket_cells(grid.cells)
+    child = textwrap.dedent("""
+        import os, signal, sys
+        from repro.campaign.engine import run_campaign
+        from repro.campaign.grid import CampaignGrid, bucket_cells
+        from repro.core.params import AFMTJ_PARAMS
+
+        grid = CampaignGrid(voltages=(0.6, 1.2),
+                            pulse_widths=(120e-12, 250e-12),
+                            temperatures=(300.0, 350.0, 400.0),
+                            n_samples=16, dt=0.1e-12, seed=0)
+
+        def killer(i, n):
+            if i == 0:
+                os.kill(os.getpid(), signal.SIGKILL)
+
+        run_campaign(AFMTJ_PARAMS, grid, backend="ref",
+                     cache_dir=sys.argv[1],
+                     max_cells_per_launch=bucket_cells(grid.cells),
+                     on_slice_complete=killer)
+    """)
+    r = subprocess.run([sys.executable, "-c", child, str(tmp_path)],
+                       env=_ENV, capture_output=True, text=True, timeout=560)
+    assert r.returncode == -signal.SIGKILL, r.stderr
+    assert list(tmp_path.glob("*.npz")), "no slice checkpoint survived"
+
+    fresh = run_campaign(AFMTJ_PARAMS, grid, backend="ref", use_cache=False,
+                         max_cells_per_launch=per)
+    resumed = run_campaign(AFMTJ_PARAMS, grid, backend="ref",
+                           cache_dir=str(tmp_path), max_cells_per_launch=per)
+    assert not resumed.from_cache
+    assert resumed.n_launches == 3 and resumed.n_resumed == 1
+    np.testing.assert_array_equal(resumed.crossing_time, fresh.crossing_time)
+    # slice checkpoints retired once the whole-campaign entry is durable
+    cached = run_campaign(AFMTJ_PARAMS, grid, backend="ref",
+                          cache_dir=str(tmp_path), max_cells_per_launch=per)
+    assert cached.from_cache
+    assert len(list(tmp_path.glob("*.npz"))) == 1
+
+
+def test_campaign_resume_in_process_hook(tmp_path):
+    """The ``on_slice_complete`` hook fires after each checkpointed launch;
+    aborting through it leaves resumable state (no subprocess needed)."""
+    from repro.campaign.grid import bucket_cells
+
+    grid = _resume_grid()
+    per = bucket_cells(grid.cells)
+
+    class Abort(Exception):
+        pass
+
+    def die_after_two(i, n):
+        assert n == 3
+        if i == 1:
+            raise Abort
+
+    with pytest.raises(Abort):
+        run_campaign(AFMTJ_PARAMS, grid, backend="ref",
+                     cache_dir=str(tmp_path), max_cells_per_launch=per,
+                     on_slice_complete=die_after_two)
+    res = run_campaign(AFMTJ_PARAMS, grid, backend="ref",
+                       cache_dir=str(tmp_path), max_cells_per_launch=per)
+    assert res.n_resumed == 2 and not res.from_cache
+    fresh = run_campaign(AFMTJ_PARAMS, grid, backend="ref", use_cache=False,
+                         max_cells_per_launch=per)
+    np.testing.assert_array_equal(res.crossing_time, fresh.crossing_time)
+
+
+def test_campaign_launch_retry_bounded(monkeypatch):
+    """Transient launch failures retry with backoff and still produce the
+    exact result; a persistent failure raises after max_retries."""
+    from repro.campaign import engine
+
+    grid = _resume_grid()
+    fresh = run_campaign(AFMTJ_PARAMS, grid, backend="ref", use_cache=False)
+
+    real = engine._integrate_sharded
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient device loss")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(engine, "_integrate_sharded", flaky)
+    res = engine.run_campaign(AFMTJ_PARAMS, grid, backend="ref",
+                              use_cache=False, max_retries=1,
+                              retry_backoff_s=0.0)
+    np.testing.assert_array_equal(res.crossing_time, fresh.crossing_time)
+
+    def always_fails(*a, **kw):
+        calls["n"] += 1
+        raise RuntimeError("dead device")
+
+    calls["n"] = 0
+    monkeypatch.setattr(engine, "_integrate_sharded", always_fails)
+    with pytest.raises(RuntimeError, match="dead device"):
+        engine.run_campaign(AFMTJ_PARAMS, grid, backend="ref",
+                            use_cache=False, max_retries=2,
+                            retry_backoff_s=0.0)
+    assert calls["n"] == 4          # 1 dispatch + 1 sync + 2 bounded retries
 
 
 # ------------------------------------------------------------- grid/packing
