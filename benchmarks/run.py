@@ -1046,6 +1046,194 @@ def bench_fault():
           f"crossing tensor bit-identical={identical}")
 
 
+# child process for the device-count scaling rows: forced host devices must
+# be in XLA_FLAGS before the child's first jax import, so wall-clock and
+# lane-plan numbers come from subprocesses; the parent compares WER hashes
+# across device counts (the bit-identity half of scaling_monotone_ok)
+_SCALE_CHILD = """
+import hashlib, json, sys, time
+import numpy as np
+import jax
+from repro.campaign import CampaignGrid, bucket_cells, run_campaign
+from repro.campaign.engine import _device_plan
+from repro.core.params import AFMTJ_PARAMS
+
+n_dev, n_samples = int(sys.argv[1]), int(sys.argv[2])
+assert jax.device_count() == n_dev, jax.devices()
+grid = CampaignGrid(voltages=(0.6, 1.2), pulse_widths=(20e-12, 40e-12),
+                    temperatures=(300.0,), n_samples=n_samples,
+                    dt=0.1e-12, seed=0)
+kw = dict(backend="ref", use_cache=False, reduce="stream", n_bins=128)
+run_campaign(AFMTJ_PARAMS, grid, **kw)              # compile
+t0 = time.time()
+res = run_campaign(AFMTJ_PARAMS, grid, **kw)
+us = (time.time() - t0) * 1e6
+_, plan_cols = _device_plan(bucket_cells(grid.cells), None)
+print(json.dumps({
+    "us_per_sample": us / res.n_samples_total,
+    "lanes_per_dev": plan_cols // n_dev,
+    "wer_sha": hashlib.sha256(res.wer_counts.tobytes()).hexdigest()}))
+"""
+
+# child for the donated-retry peak-memory rows: a full write-verify retry
+# schedule (the donation use case) with ru_maxrss as the peak-RSS meter —
+# measured in a fresh process so the parent's own allocations don't mask it
+_DONATE_CHILD = """
+import json, resource, sys
+from repro.imc.write_path import WritePolicy, write_verify
+
+pol = WritePolicy(v_write=1.0, pulse=130e-12, max_attempts=4, seed=1,
+                  use_cache=False, donate=bool(int(sys.argv[1])))
+res = write_verify("afmtj", int(sys.argv[2]), pol)
+print(json.dumps({
+    "peak_bytes": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024,
+    "rounds": res.rounds,
+    "residual_ber": res.residual_ber}))
+"""
+
+
+def bench_scale():
+    """Scaling path (DESIGN.md §14): streaming on-device reduction vs the
+    dense host round-trip (the >= 4x transfer pin), donated retry buffers
+    (peak-RSS rows), device-count scaling on forced host devices
+    (per-device lane plans + WER bit-identity — the deterministic half of
+    scaling on a wall-clock-less CI box), and the XLA tuning profile
+    applied to a child environment.  Ends with the stale-droppings GC
+    sweep over the default cache dir."""
+    import hashlib
+    import json as _json
+    import subprocess
+    import sys as _sys
+
+    from repro.campaign import CampaignGrid, run_campaign
+    from repro.campaign import cache as _cache
+    from repro.core.params import AFMTJ_PARAMS
+    from repro.launch.mesh import host_device_flag
+    from repro.runtime import xla_flags
+
+    import os as _os
+
+    n_bins = 128
+    if SMOKE:
+        grid = CampaignGrid(voltages=(0.6, 1.2),
+                            pulse_widths=(120e-12, 250e-12),
+                            temperatures=(300.0, 350.0, 400.0),
+                            n_samples=64, dt=0.1e-12, seed=0)
+    else:
+        # the full wer-bench grid — the ISSUE's >= 4x transfer pin is
+        # measured at exactly the grid the WER surfaces ship from
+        grid = CampaignGrid(voltages=(0.8, 1.0, 1.2),
+                            pulse_widths=tuple(x * 1e-12 for x in
+                                               (100, 150, 200, 250, 300,
+                                                350, 400)),
+                            temperatures=(260.0, 300.0, 340.0),
+                            n_samples=512, dt=0.1e-12, seed=0)
+    print(f"# scale: streaming/donation/mesh scaling, "
+          f"{len(grid.temperatures)}T x {len(grid.voltages)}V x "
+          f"{grid.n_samples}S, {grid.n_steps} steps, {n_bins} hist bins "
+          f"({'smoke' if SMOKE else 'full'})")
+    print("name,us_per_call,derived")
+
+    # --- streaming on-device reduction vs the dense lane-plane round-trip
+    dense, us_d = _t(lambda: run_campaign(AFMTJ_PARAMS, grid,
+                                          use_cache=False))
+    stream, us_s = _t(lambda: run_campaign(AFMTJ_PARAMS, grid,
+                                           use_cache=False, reduce="stream",
+                                           n_bins=n_bins))
+    n = dense.n_samples_total
+    ratio = dense.host_bytes / max(stream.host_bytes, 1)
+    wer_same = bool(np.array_equal(stream.wer_surface(),
+                                   dense.wer_surface()))
+    lp_d = dense.latency_percentiles((50.0, 99.0))
+    lp_s = stream.latency_percentiles((50.0, 99.0))
+    with np.errstate(invalid="ignore"):
+        lat_err = float(np.nanmax(np.abs(lp_d - lp_s))) if np.isfinite(
+            lp_d).any() else 0.0
+    lat_ok = (lat_err <= stream.sketch_tolerance
+              and np.isnan(lp_d).sum() == np.isnan(lp_s).sum())
+    emit("scale.dense.peak_bytes", us_d, dense.host_bytes, "B")
+    emit("scale.streaming.peak_bytes", us_s, stream.host_bytes, "B")
+    emit("scale.streaming.transfer_reduction", 0, f"{ratio:.1f}", "x")
+    emit("scale.streaming.latency_err_s", 0, f"{lat_err:.2e}", "s")
+    emit("scale.streaming.us_per_sample", us_s / n, n, "us/sample")
+    emit("streaming_reduction_ok", 0,
+         int(ratio >= 4.0 and wer_same and lat_ok))
+    print(f"# dense moves {dense.host_bytes} B to host vs streaming "
+          f"{stream.host_bytes} B ({ratio:.1f}x, target >= 4x); WER "
+          f"bit-identical={wer_same}, latency err {lat_err:.2e} s within "
+          f"{stream.sketch_tolerance:.2e} s sketch tolerance")
+
+    env = dict(_os.environ)
+    env.setdefault("PYTHONPATH", "src")
+
+    def _child(code, *argv, extra_env=None):
+        e = dict(env) if extra_env is None else {**env, **extra_env}
+        r = subprocess.run([_sys.executable, "-c", code, *argv], env=e,
+                           capture_output=True, text=True, timeout=560)
+        assert r.returncode == 0, r.stderr
+        return _json.loads(r.stdout.strip().splitlines()[-1])
+
+    # --- donated retry buffers: peak RSS of a full write-verify schedule
+    cells = 256 if SMOKE else 640
+    plain = _child(_DONATE_CHILD, "0", str(cells))
+    donated = _child(_DONATE_CHILD, "1", str(cells))
+    emit("scale.nodonation.peak_bytes", 0, plain["peak_bytes"], "B")
+    emit("scale.donation.peak_bytes", 0, donated["peak_bytes"], "B")
+    emit("scale.donation.rounds", 0, donated["rounds"])
+    print(f"# peak RSS over {donated['rounds']} retry rounds: "
+          f"{plain['peak_bytes']/1e6:.0f} MB undonated vs "
+          f"{donated['peak_bytes']/1e6:.0f} MB donated (CPU RSS is a loose "
+          "proxy; on an accelerator donation halves device residency of "
+          "the state block)")
+
+    # --- device-count scaling: forced host devices in child processes.
+    # One host CPU gives no wall-clock speedup, so the CI-stable marker is
+    # deterministic: per-device lane plans monotone non-increasing AND the
+    # WER counts bit-identical at every device count.
+    scale_samples = 512 if SMOKE else 2048
+    rows = {}
+    for n_dev in (1, 2, 4, 8):
+        rows[n_dev] = _child(
+            _SCALE_CHILD, str(n_dev), str(scale_samples),
+            extra_env={"XLA_FLAGS": (env.get("XLA_FLAGS", "") + " "
+                                     + host_device_flag(n_dev)).strip()})
+        emit(f"scale.devices{n_dev}.us_per_sample", 0,
+             f"{rows[n_dev]['us_per_sample']:.2f}", "us/sample")
+        emit(f"scale.devices{n_dev}.lanes_per_dev", 0,
+             rows[n_dev]["lanes_per_dev"])
+    lanes = [rows[d]["lanes_per_dev"] for d in (1, 2, 4, 8)]
+    shas = {rows[d]["wer_sha"] for d in (1, 2, 4, 8)}
+    emit("scaling_monotone_ok", 0,
+         int(all(a >= b for a, b in zip(lanes, lanes[1:]))
+             and len(shas) == 1))
+    print(f"# lanes/device {lanes} across 1/2/4/8 forced host devices, "
+          f"WER bit-identical across all counts={len(shas) == 1}")
+
+    # --- XLA tuning profile: same 1-device child, baseline env vs the
+    # gpu-scaling profile merged in (flags parse and no-op on CPU — the
+    # before/after pair is the honest CPU-CI reading; on a GPU fleet the
+    # tuned row is where the profile earns its place)
+    base = _child(_SCALE_CHILD, "1", str(scale_samples))
+    tuned_env = xla_flags.apply_profile("gpu-scaling", env)
+    tuned = _child(_SCALE_CHILD, "1", str(scale_samples),
+                   extra_env={"XLA_FLAGS": tuned_env["XLA_FLAGS"]})
+    emit("scale.xla.baseline.us_per_sample", 0,
+         f"{base['us_per_sample']:.2f}", "us/sample")
+    emit("scale.xla.tuned.us_per_sample", 0,
+         f"{tuned['us_per_sample']:.2f}", "us/sample")
+    emit("scale.xla.profile_flags", 0,
+         len(xla_flags.PROFILES["gpu-scaling"]))
+    emit("scale.xla.wer_identical_ok", 0,
+         int(base["wer_sha"] == tuned["wer_sha"]))
+
+    # --- teardown: sweep stale droppings (tmp files from SIGKILLed stores,
+    # claim files from dead peers) out of the default cache dir
+    n_tmp = _cache.gc_stale_tmp()
+    n_claims = _cache.gc_stale_claims()
+    emit("scale.gc.stale_tmp", 0, n_tmp)
+    emit("scale.gc.stale_claims", 0, n_claims)
+
+
 BENCHES = {
     "table1": bench_table1,
     "fig3": bench_fig3,
@@ -1061,6 +1249,7 @@ BENCHES = {
     "serve": bench_serve,
     "model": bench_model,
     "fault": bench_fault,
+    "scale": bench_scale,
 }
 
 

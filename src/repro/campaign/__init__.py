@@ -10,7 +10,9 @@ with on-disk result caching.
 
   grid    — CampaignGrid axes + SoA packing (fused-CT plane, shape buckets)
   engine  — run_campaign / run_ensemble + surface reductions + early exit
-  cache   — content-addressed npz result cache
+            + streaming on-device reduction / donation / multi-process
+            mesh launch partitioning (DESIGN.md §14)
+  cache   — content-addressed npz result cache + lockless work claims
 """
 from repro.campaign.cache import campaign_key  # noqa: F401
 from repro.campaign.engine import (  # noqa: F401

@@ -141,6 +141,92 @@ def drop_arrays(key: str, cache_dir: Optional[str] = None) -> bool:
         return False
 
 
+# ----------------------------------------------------------------- claims
+# Lockless work claims over the content-addressed store (DESIGN.md §14).
+# A fleet of campaign processes sharing one cache directory dedupes work
+# by *claiming* a content key before integrating it: ``O_CREAT | O_EXCL``
+# on ``<key>.claim`` is atomic on every POSIX filesystem (including NFS
+# for local excl semantics we rely on), so exactly one process wins each
+# key without any lock server.  A claim is advisory — the npz store stays
+# last-writer-wins-atomic regardless — its only job is to keep N processes
+# from integrating the same slice N times.  Crashed claimants are handled
+# by age: a claim older than ``ttl_s`` is presumed orphaned and may be
+# *stolen* (unlinked + re-claimed); the store's atomicity makes a rare
+# double-compute after a steal merely wasteful, never wrong.
+
+def claim_path(key: str, cache_dir: Optional[str] = None) -> Path:
+    return Path(cache_dir or DEFAULT_CACHE_DIR) / f"{key}.claim"
+
+
+def try_claim(key: str, cache_dir: Optional[str] = None,
+              owner: str = "") -> bool:
+    """Atomically claim ``key`` for this process; False if already claimed."""
+    d = Path(cache_dir or DEFAULT_CACHE_DIR)
+    d.mkdir(parents=True, exist_ok=True)
+    try:
+        fd = os.open(claim_path(key, cache_dir),
+                     os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        return False
+    with os.fdopen(fd, "w") as f:
+        f.write(json.dumps({"pid": os.getpid(), "owner": owner}))
+    return True
+
+
+def release_claim(key: str, cache_dir: Optional[str] = None) -> bool:
+    """Drop this (or any) claim on ``key`` — best-effort, True on unlink."""
+    try:
+        claim_path(key, cache_dir).unlink()
+        return True
+    except OSError:
+        return False
+
+
+def claim_age_s(key: str, cache_dir: Optional[str] = None) -> Optional[float]:
+    """Seconds since ``key`` was claimed, or None when unclaimed."""
+    import time
+
+    try:
+        return max(0.0, time.time() - claim_path(key, cache_dir).stat().st_mtime)
+    except OSError:
+        return None
+
+
+def steal_claim(key: str, ttl_s: float, cache_dir: Optional[str] = None,
+                owner: str = "") -> bool:
+    """Take over a claim older than ``ttl_s`` (a crashed claimant).
+
+    Unlink-then-reclaim: two stealers can both unlink, but only one wins
+    the ``O_EXCL`` re-create — the loser retreats to polling the store.
+    """
+    age = claim_age_s(key, cache_dir)
+    if age is None or age < ttl_s:
+        return False
+    release_claim(key, cache_dir)
+    return try_claim(key, cache_dir, owner=owner)
+
+
+def gc_stale_claims(cache_dir: Optional[str] = None,
+                    max_age_s: float = 3600.0) -> int:
+    """Sweep orphaned ``*.claim`` files older than ``max_age_s`` (claims of
+    processes that died without ``release_claim``); returns files removed."""
+    import time
+
+    d = Path(cache_dir or DEFAULT_CACHE_DIR)
+    if not d.is_dir():
+        return 0
+    cutoff = time.time() - max_age_s
+    removed = 0
+    for c in d.glob("*.claim"):
+        try:
+            if c.stat().st_mtime <= cutoff:
+                c.unlink()
+                removed += 1
+        except OSError:
+            continue
+    return removed
+
+
 # --------------------------------------------------------------- campaigns
 def campaign_key(p: DeviceParams, grid, backend: str) -> str:
     """Content hash of everything the crossing-time tensor depends on."""

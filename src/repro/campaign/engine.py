@@ -27,20 +27,34 @@ run (``tests/test_fused_engine.py`` pins this).
 Scaling: the cells axis is embarrassingly parallel, so the engine shards
 cell tiles across every visible device with ``shard_map`` — each device
 integrates its own ``cells / n_dev`` lanes (a multiple of the kernel's
-CELL_TILE), no cross-device communication at all.  Launches above
-``max_cells_per_launch`` split along temperature-slice boundaries and are
-all dispatched asynchronously before the first ``block_until_ready`` —
-the host never serializes device work against transfers.  Results are
-reduced host-side into WER / latency-percentile surfaces and cached on
-disk (``cache.py``) keyed by the full campaign content hash.
+CELL_TILE, padded with budget-0 lanes when the tiles don't divide the
+mesh — ``_device_plan``), no cross-device communication at all.  Launches
+above ``max_cells_per_launch`` split along temperature-slice boundaries
+and are all dispatched asynchronously before the first
+``block_until_ready`` — the host never serializes device work against
+transfers.  Results are reduced host-side into WER / latency-percentile
+surfaces and cached on disk (``cache.py``) keyed by the full campaign
+content hash.
+
+Past one host (DESIGN.md §14): ``reduce="stream"`` keeps even the
+reduction on device — each launch returns exact WER counts and a
+first-crossing histogram instead of its dense lane plane, so host
+transfers are O(grid points) regardless of sample count; ``donate=True``
+donates the state block to the launch so retry rounds reuse device
+memory; and a ``launch.mesh.CampaignMesh`` partitions whole launches
+across processes, which rendezvous lockless-ly through the
+content-addressed store (claims + slice checkpoints in ``cache.py``) —
+no collectives, so a mesh of hosts needs nothing but a shared cache
+directory.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 import warnings
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,12 +107,10 @@ def _quantize_steps(n_steps: int, horizon: str = "pow2") -> int:
     return next_pow2(n_steps)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "p", "dt", "n_steps", "switch_threshold", "backend", "n_dev", "chunk"))
-def _integrate_sharded(state, seeds, sigma, budget, lane_params=None, *,
-                       p: DeviceParams, dt: float, n_steps: int,
-                       switch_threshold: float, backend: str, n_dev: int,
-                       chunk: int):
+def _integrate_impl(state, seeds, sigma, budget, lane_params=None, *,
+                    p: DeviceParams, dt: float, n_steps: int,
+                    switch_threshold: float, backend: str, n_dev: int,
+                    chunk: int):
     """Advance a (8, cells) block on ``n_dev`` devices (cells sharded).
 
     Everything that varies *within* a campaign — or between retry rounds
@@ -142,14 +154,177 @@ def _integrate_sharded(state, seeds, sigma, budget, lane_params=None, *,
     return fn(state, seeds, sigma, budget, lane_params)
 
 
-def _usable_devices(cells_padded: int, devices: Optional[int]) -> int:
-    """Largest device count (<= requested/visible) whose per-shard slice is
-    a whole number of CELL_TILE tiles."""
-    n = jax.device_count() if devices is None else min(devices, jax.device_count())
-    tiles = cells_padded // CELL_TILE
-    while n > 1 and tiles % n != 0:
-        n -= 1
-    return max(n, 1)
+_INTEGRATE_STATICS = ("p", "dt", "n_steps", "switch_threshold", "backend",
+                      "n_dev", "chunk")
+_integrate_sharded = jax.jit(_integrate_impl,
+                             static_argnames=_INTEGRATE_STATICS)
+# Donated variant (DESIGN.md §14): XLA aliases the (8, cells) state input
+# to the same-shaped output, so retry rounds (write-verify schedules, the
+# engine's own error retries) reuse device memory instead of holding both
+# blocks live.  A *separate* jit object, so every compile-count pin on
+# ``_integrate_sharded`` keeps counting only the default path.  NOTE:
+# aliasing constrains XLA's buffer assignment, and the re-scheduled
+# executable may associate f32 arithmetic differently — observed as rare
+# +-1-step crossing differences vs the undonated compile (deterministic
+# run-to-run; tests/test_scale.py pins repeatability and the statistical
+# envelope).  Donation is therefore opt-in and never the default under a
+# bit-exactness pin.
+_integrate_donated = jax.jit(_integrate_impl,
+                             static_argnames=_INTEGRATE_STATICS,
+                             donate_argnums=(0,))
+
+
+def _device_plan(span_cells: int, devices: Optional[int]) -> Tuple[int, int]:
+    """Device count + padded lane width for one launch span.
+
+    Never demotes the device count: when the span's CELL_TILE tiles don't
+    divide the requested count (pow2 shape buckets vs 3/5/6-device
+    meshes), the span is padded with budget-0 lanes up to the next
+    tiles-per-device boundary (``launch.sharding.plan_cell_tiles``).  The
+    pre-PR-10 ``_usable_devices`` instead walked ``n`` down until the
+    tiles divided — silently serializing exactly the uneven meshes
+    multi-host fleets produce (tests/test_scale.py pins the fix at 3, 5
+    and 6 host devices).  Pad lanes are frozen at step 0 (budget 0) and
+    trimmed before any reduction, so crossing rows stay bit-identical to
+    the 1-device launch."""
+    n = (jax.device_count() if devices is None
+         else max(1, min(int(devices), jax.device_count())))
+    tiles = -(-span_cells // CELL_TILE)
+    from repro.launch.sharding import plan_cell_tiles
+
+    _, padded_tiles = plan_cell_tiles(tiles, n)
+    return n, padded_tiles * CELL_TILE
+
+
+def _pad_lanes(st, sd, sg, bd, lp, pad: int, p: DeviceParams):
+    """Append ``pad`` frozen lanes (zero state/seed/sigma/budget, nominal
+    variation rows) so a span fills its device plan exactly."""
+    if pad == 0:
+        return st, sd, sg, bd, lp
+    st = jnp.pad(st, ((0, 0), (0, pad)))
+    sd = jnp.pad(sd, (0, pad))
+    sg = jnp.pad(sg, (0, pad))
+    bd = jnp.pad(bd, (0, pad))
+    if lp is not None:
+        fill = np.broadcast_to(
+            np.array([[p.alpha], [p.b_aniso], [1.0]], np.float32), (3, pad))
+        lp = jnp.concatenate([lp, jnp.asarray(fill)], axis=1)
+    return st, sd, sg, bd, lp
+
+
+# ------------------------------------------------- streaming reduction
+# DESIGN.md §14: billion-sample campaigns cannot round-trip dense lane
+# planes to the host (32 B/lane for the (8, cells) block).  In streaming
+# mode every launch is reduced ON DEVICE to exactly what the surfaces
+# need — WER counts per (slice, V, pulse) and a fixed-bin first-crossing
+# histogram per (slice, V) — so the host transfer per launch is O(grid
+# points), independent of the sample count.  WER counts are *bit-exact*
+# by construction: the dense surface compares f64(crossing_step)*dt >
+# pulse, and ``_wer_threshold_steps`` precomputes (in f64, on the host)
+# the smallest integer step satisfying that per pulse, so the device
+# only ever runs an exact integer comparison.  Latency percentiles come
+# from the histogram: exact (bit-identical reconstruction of
+# np.nanpercentile's linear interpolation) while bins resolve single
+# steps, within two bin widths otherwise — the sketch-error budget
+# ``CampaignResult.sketch_tolerance`` documents and tests pin.
+
+# WER campaigns record crossing steps in the kernel's f32 row — exact
+# integers only below 2**24, which streaming mode relies on for its
+# integer compares (dense mode has the same representational limit).
+_STREAM_MAX_STEPS = 1 << 24
+
+
+def _wer_threshold_steps(pulse_widths, dt: float, n_steps: int) -> np.ndarray:
+    """Smallest integer step count per pulse with ``f64(k)*dt > pulse`` —
+    counting ``crossing_step >= k`` on device then reproduces the dense
+    f64 comparison bit-for-bit."""
+    out = []
+    for pl in pulse_widths:
+        k = int(math.ceil(pl / dt))
+        while np.float64(k) * dt <= pl:
+            k += 1
+        while k > 0 and np.float64(k - 1) * dt > pl:
+            k -= 1
+        assert k <= n_steps, (k, n_steps, pl)   # grid.n_steps covers pulses
+        out.append(k)
+    return np.asarray(out, np.int32)
+
+
+def _hist_step_values(n_steps: int, n_bins: int) -> np.ndarray:
+    """Lower-edge crossing *step* of every histogram bin (f64).  With
+    ``n_bins >= n_steps`` a bin is a single step and reconstruction is
+    exact; otherwise bin ``b`` spans steps ``[ceil(b*n_steps/n_bins),
+    ceil((b+1)*n_steps/n_bins))`` and its lower edge stands in for every
+    sample inside."""
+    if n_bins >= n_steps:
+        return np.arange(n_bins, dtype=np.float64)
+    return np.ceil(np.arange(n_bins, dtype=np.float64) * n_steps / n_bins)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_slices", "slice_cells", "n_v", "n_s", "n_steps", "n_bins"))
+def _reduce_rows(out, kmin, *, n_slices: int, slice_cells: int, n_v: int,
+                 n_s: int, n_steps: int, n_bins: int):
+    """On-device reduction of one launch's crossing row.
+
+    Returns ``(wer_counts, hist)``: int32 ``(n_slices, n_v, n_p)`` counts
+    of samples NOT switched by each pulse (exact — see module comment)
+    and the int32 ``(n_slices, n_v, n_bins)`` first-crossing histogram
+    over *switched* samples.  Only these reduced tensors ever reach the
+    host; bucket padding, device-plan padding and never-crossed sentinels
+    are all excluded on device."""
+    row7 = out[7, : n_slices * slice_cells].reshape(n_slices, slice_cells)
+    ki = jnp.minimum(row7[:, : n_v * n_s], float(n_steps)).astype(jnp.int32)
+    ki = ki.reshape(n_slices, n_v, n_s)
+    wer = (ki[:, :, None, :] >= kmin[None, None, :, None]).sum(
+        axis=-1).astype(jnp.int32)
+    switched = ki < n_steps
+    if n_bins >= n_steps:                       # one bin per step: exact
+        bins = ki
+    else:
+        # f32 scale can misplace a boundary value by one bin — covered by
+        # the two-bin sketch_tolerance
+        bins = jnp.floor(ki.astype(jnp.float32)
+                         * (float(n_bins) / float(n_steps))).astype(jnp.int32)
+        bins = jnp.clip(bins, 0, n_bins - 1)
+    cell = jnp.arange(n_slices * n_v, dtype=jnp.int32).reshape(
+        n_slices, n_v, 1)
+    flat = jnp.where(switched, cell * n_bins + bins,
+                     n_slices * n_v * n_bins)   # unswitched -> spill bin
+    hist = jnp.zeros((n_slices * n_v * n_bins + 1,), jnp.int32
+                     ).at[flat.reshape(-1)].add(1)
+    return wer, hist[:-1].reshape(n_slices, n_v, n_bins)
+
+
+def _percentiles_from_hist(hist: np.ndarray, values: np.ndarray,
+                           qs) -> np.ndarray:
+    """Percentiles over switched samples from per-bin counts — the exact
+    linear-interpolation rule ``np.nanpercentile`` applies to the sorted
+    dense samples, reconstructed from cumulative counts (the sorted array
+    is fully determined by them).  All-unswitched cells report NaN, like
+    the dense all-NaN slice."""
+    qs = np.asarray(qs, dtype=float)
+    flat = hist.reshape(-1, hist.shape[-1])
+    out = np.full((flat.shape[0], len(qs)), np.nan)
+    for i, h in enumerate(flat):
+        n = int(h.sum())
+        if n == 0:
+            continue
+        cum = np.cumsum(h)
+        pos = (qs / 100.0) * (n - 1)
+        lo = np.floor(pos).astype(int)
+        hi = np.ceil(pos).astype(int)
+        v_lo = values[np.searchsorted(cum, lo, side="right")]
+        v_hi = values[np.searchsorted(cum, hi, side="right")]
+        # np.percentile's _lerp flips the anchor at t >= 0.5 (monotonicity
+        # fix-up); reproduce it exactly or single-ULP drift breaks the
+        # bit-identity claim for per-step bins
+        t = pos - lo
+        lerp = v_lo + t * (v_hi - v_lo)
+        flip = t >= 0.5
+        lerp[flip] = v_hi[flip] - (v_hi[flip] - v_lo[flip]) * (1 - t[flip])
+        out[i] = lerp
+    return out.reshape(hist.shape[:-1] + (len(qs),))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +361,7 @@ def run_ensemble(
     lane_params=None,                # optional (3, cells) variation rows
     sigma_lanes=None,                # optional (cells,) per-lane Brown sigma
     horizon: str = "pow2",           # compiled-horizon ladder (chunk > 0)
+    donate: bool = False,            # donate the state block to the launch
 ) -> EnsembleResult:
     """Integrate an arbitrary thermal ensemble through the kernel path.
 
@@ -237,11 +413,14 @@ def run_ensemble(
             [lp, np.broadcast_to(fill, (3, padded - cells))],
             axis=1).astype(np.float32))
     seeds = noise.cell_seeds(seed, padded)
-    n_dev = _usable_devices(padded, devices)
+    n_dev, plan_cols = _device_plan(padded, devices)
+    state, seeds, sigma, budget, lane_params = _pad_lanes(
+        state, seeds, sigma, budget, lane_params, plan_cols - padded, p)
     n_static = _quantize_steps(n_steps, horizon) if chunk > 0 else n_steps
 
     t0 = time.time()
-    out = _integrate_sharded(
+    fn = _integrate_donated if donate else _integrate_sharded
+    out = fn(
         state, seeds, sigma, budget, lane_params, p=p, dt=dt,
         n_steps=n_static, switch_threshold=float(switch_threshold),
         backend=backend, n_dev=n_dev, chunk=int(chunk))
@@ -259,19 +438,49 @@ class CampaignResult:
     """WER / latency surfaces over the (T, V, pulse) axes of a grid — with
     a leading process-corner axis when the grid carries a
     ``VariationSpec`` (``crossing_time`` is then (n_C, n_T, n_V, n_S) and
-    every surface reduction grows the same leading axis)."""
+    every surface reduction grows the same leading axis).
+
+    ``reduced=True`` is the streaming-reduction variant (DESIGN.md §14):
+    ``crossing_time`` is None — the dense lane planes never left the
+    devices — and the surfaces come from ``wer_counts`` (bit-exact) and
+    the ``latency_hist`` sketch (exact while bins resolve single steps,
+    within ``sketch_tolerance`` otherwise)."""
     grid: CampaignGrid
     backend: str
-    crossing_time: np.ndarray        # (n_T, n_V, n_S) s; variation grids
-                                     # prepend the corner axis (n_C, ...)
+    crossing_time: Optional[np.ndarray]  # (n_T, n_V, n_S) s; variation
+                                         # grids prepend the corner axis
+                                         # (n_C, ...); None when reduced
     elapsed_s: float                 # integration wall-clock (0 on cache hit)
     from_cache: bool = False
     n_launches: int = 1              # kernel launches this result took
     n_resumed: int = 0               # launches restored from slice checkpoints
+    reduced: bool = False            # streaming on-device reduction ran
+    wer_counts: Optional[np.ndarray] = None    # (..., n_T, n_V, n_P) int64
+    latency_hist: Optional[np.ndarray] = None  # (..., n_T, n_V, n_bins)
+    hist_values: Optional[np.ndarray] = None   # (n_bins,) bin lower edge [s]
+    host_bytes: int = 0              # result bytes transferred device->host
+    n_computed: int = 0              # launches integrated by THIS process
 
     @property
     def n_samples_total(self) -> int:
-        return int(self.crossing_time.size)
+        if self.crossing_time is not None:
+            return int(self.crossing_time.size)
+        n_t, n_v, _, n_s = self.grid.shape
+        return self.grid.n_corners * n_t * n_v * n_s
+
+    @property
+    def sketch_tolerance(self) -> float:
+        """Latency-percentile error bound of the streaming sketch [s]: 0
+        when bins resolve single steps (the histogram then determines the
+        sorted sample array exactly), else two bin widths — one for the
+        floor quantization onto bin lower edges, one for the f32 bin-index
+        rounding (``_reduce_rows``).  Dense results are exact."""
+        if not self.reduced:
+            return 0.0
+        n_bins = self.latency_hist.shape[-1]
+        if n_bins >= self.grid.n_steps:
+            return 0.0
+        return 2.0 * self.grid.n_steps * self.grid.dt / n_bins
 
     @property
     def corners(self) -> Optional[Tuple[str, ...]]:
@@ -282,7 +491,14 @@ class CampaignResult:
     def wer_surface(self) -> np.ndarray:
         """(..., n_T, n_V, n_P) write-error rate: fraction of thermal
         samples NOT switched by the end of each pulse width (leading axis =
-        process corners for variation grids)."""
+        process corners for variation grids).  Identical — bit-for-bit —
+        between dense and reduced results: the on-device counts use the
+        host-precomputed integer thresholds of ``_wer_threshold_steps``,
+        and an exact integer count divided by ``n_samples`` in f64 is the
+        same number the dense boolean ``.mean`` produces."""
+        if self.reduced:
+            return (self.wer_counts.astype(np.float64)
+                    / np.float64(self.grid.n_samples))
         pulses = np.asarray(self.grid.pulse_widths)
         # crossing_time == n_steps*dt marks "never crossed" and exceeds
         # every pulse in the grid by construction
@@ -301,6 +517,9 @@ class CampaignResult:
         axis for variation grids).  One masked ``np.nanpercentile`` over
         the whole tensor — never-crossed samples become NaN and drop out
         per (T, V) cell."""
+        if self.reduced:
+            return _percentiles_from_hist(self.latency_hist,
+                                          self.hist_values, qs)
         horizon = self.grid.n_steps * self.grid.dt
         ct = np.where(self.crossing_time < horizon, self.crossing_time,
                       np.nan)
@@ -350,14 +569,18 @@ def _launch_spans(n_slices: int, slice_cells: int,
     return [(a, min(a + per, n_slices)) for a in range(0, n_slices, per)]
 
 
-def _slice_key(key: str, a: int, b: int, chunk: int, horizon: str) -> str:
-    """Content key of one launch span's raw crossing row (resume protocol,
-    DESIGN.md §13): derived from the whole-campaign key plus everything
-    that shapes the launch decomposition, so a resume with a different
-    split/horizon never matches a stale slice."""
+def _slice_key(key: str, a: int, b: int, chunk: int, horizon: str,
+               kind: str = "slice-row7") -> str:
+    """Content key of one launch span's checkpoint payload (resume
+    protocol, DESIGN.md §13): derived from the whole-campaign key plus
+    everything that shapes the launch decomposition, so a resume with a
+    different split/horizon never matches a stale slice.  ``kind`` keeps
+    payload flavors apart — ``"slice-row7"`` is the dense raw crossing
+    row (unchanged since PR 9, so existing checkpoints stay resumable);
+    streaming launches store ``"slice-reduced-<n_bins>"`` entries."""
     return _cache.content_key({"campaign": key, "span": [int(a), int(b)],
                                "chunk": int(chunk), "horizon": horizon,
-                               "kind": "slice-row7"})
+                               "kind": kind})
 
 
 def run_campaign(
@@ -375,6 +598,10 @@ def run_campaign(
     max_retries: int = 2,
     retry_backoff_s: float = 0.25,
     on_slice_complete=None,
+    reduce: str = "dense",
+    n_bins: int = 512,
+    donate: bool = False,
+    mesh=None,
 ) -> CampaignResult:
     """Run (or cache-load) a full Monte-Carlo campaign.
 
@@ -414,125 +641,382 @@ def run_campaign(
     (``retry_backoff_s`` base).  ``on_slice_complete(i, n_launches)`` fires
     after each freshly-integrated launch is checkpointed — the hook the
     kill/resume tests use to die at a deterministic point.
+
+    Scaling knobs (DESIGN.md §14):
+
+    * ``reduce="stream"`` turns on the streaming on-device reduction: each
+      launch is reduced to WER counts + a first-crossing histogram on the
+      devices (``_reduce_rows``) and only those O(grid-points) tensors
+      reach the host — ``CampaignResult.reduced`` is then True, WER
+      surfaces are bit-identical to dense mode and latency percentiles are
+      within ``sketch_tolerance`` (exact when ``n_bins >= grid.n_steps``).
+      Streaming results cache under their own derived key, so dense and
+      reduced entries never shadow each other.
+    * ``donate=True`` routes launches through ``_integrate_donated``: the
+      (8, cells) state block is donated to XLA, halving peak device
+      residency across retry rounds (write-verify schedules).  A retry
+      whose donated input was consumed re-packs the block from the grid's
+      deterministic draws.  Donated runs are deterministic and
+      statistically identical, but the alias-constrained executable may
+      round rare lanes' crossings one step differently than the default
+      compile (see ``_integrate_donated``) — keep the default for
+      bit-exactness pins.
+    * ``mesh`` (a ``launch.mesh.CampaignMesh``) scales past one process:
+      ``mesh.n_devices`` shards each launch's cells plane, and with
+      ``mesh.process_count > 1`` whole launches are partitioned across
+      processes through the content-addressed store — each process claims
+      launches lockless-ly (``cache.try_claim``), polls peers' slice
+      checkpoints, and steals claims older than ``mesh.claim_ttl_s`` from
+      dead peers.  Requires ``use_cache`` (the store is the rendezvous);
+      every process returns the identical assembled result.
     """
     assert backend in ("pallas", "ref"), backend
+    assert reduce in ("dense", "stream"), reduce
+    streaming = reduce == "stream"
+    if mesh is not None:
+        devices = mesh.n_devices
+    multi = mesh is not None and mesh.process_count > 1
     spec = grid.variation
-    n_t, n_v, _, n_s = grid.shape
+    n_t, n_v, n_p, n_s = grid.shape
     n_c = grid.n_corners
     expect_shape = ((n_c, n_t, n_v, n_s) if spec is not None
                     else (n_t, n_v, n_s))
     key = _cache.campaign_key(p, grid, backend)
-    if use_cache:
+    n_steps = grid.n_steps
+    if streaming:
+        assert int(n_bins) >= 1, n_bins
+        assert n_steps <= _STREAM_MAX_STEPS, (
+            "streaming WER relies on exact integer steps in the kernel's "
+            f"f32 crossing row: n_steps={n_steps} > {_STREAM_MAX_STEPS}")
+        # streaming entries live under their own derived key: the payload
+        # is a different tensor family (counts + histogram, n_bins-shaped)
+        # and must never shadow — or be shadowed by — a dense entry
+        red_key = _cache.content_key({"campaign": key, "kind": "reduced",
+                                      "n_bins": int(n_bins), "v": 1})
+        lead = (n_c, n_t) if spec is not None else (n_t,)
+        expect_wer = lead + (n_v, n_p)
+        expect_hist = lead + (n_v, int(n_bins))
+        hist_values = _hist_step_values(n_steps, int(n_bins)) * grid.dt
+        kmin_dev = jnp.asarray(
+            _wer_threshold_steps(grid.pulse_widths, grid.dt, n_steps))
+
+        def _reduced_result(wer, hist, **kw):
+            return CampaignResult(
+                grid=grid, backend=backend, crossing_time=None,
+                reduced=True, wer_counts=np.asarray(wer).astype(np.int64),
+                latency_hist=np.asarray(hist), hist_values=hist_values,
+                **kw)
+
+    def _load_whole():
+        """This mode's durable whole-campaign entry, or None on miss."""
+        if streaming:
+            hit = _cache.load_arrays(red_key, cache_dir)
+            if (hit is not None and "wer" in hit and "hist" in hit
+                    and hit["wer"].shape == expect_wer
+                    and hit["hist"].shape == expect_hist):
+                return hit
+            return None
         hit = _cache.load(key, cache_dir)
-        if hit is not None and hit.shape == expect_shape:
+        return hit if (hit is not None and hit.shape == expect_shape) else None
+
+    if use_cache:
+        whole = _load_whole()
+        if whole is not None:
+            if streaming:
+                return _reduced_result(whole["wer"], whole["hist"],
+                                       elapsed_s=0.0, from_cache=True,
+                                       n_launches=0)
             return CampaignResult(grid=grid, backend=backend,
-                                  crossing_time=hit, elapsed_s=0.0,
+                                  crossing_time=whole, elapsed_s=0.0,
                                   from_cache=True, n_launches=0)
 
-    n_steps = grid.n_steps
     n_static = _quantize_steps(n_steps, horizon) if chunk > 0 else n_steps
-    if spec is None:
-        state, seeds, sigma, budget, spans = pack_campaign(grid, p)
-        lane_params = None
-    else:
-        state, seeds, sigma, budget, lane_params, spans = pack_variation(
-            grid, p)
-    n_slices = n_c * n_t
-    slice_cells = state.shape[1] // n_slices
-    launches = _launch_spans(n_slices, slice_cells, max_cells_per_launch)
-    if spec is not None and len(launches) == 1:
+
+    def _pack_inputs():
+        """(Re-)pack the campaign's device inputs — once up front, and
+        again when a donated launch consumed the block before a retry
+        (the draws are deterministic, so a rebuilt block is bit-identical
+        to the consumed one)."""
+        if spec is None:
+            st, sd, sg, bd, sp = pack_campaign(grid, p)
+            lp = None
+        else:
+            st, sd, sg, bd, lp, sp = pack_variation(grid, p)
+        return st, sd, sg, bd, lp, sp
+
+    def _bucket_pad(st, sd, sg, bd, lp):
         # total-plane pow2 bucket: corner count reaches the compile key
         # only through this logarithmic bucket (3 vs 4 corners usually
         # share a compiled shape; pinned by tests/test_variation.py)
         from repro.campaign.grid import bucket_cells
-        total = state.shape[1]
+        total = st.shape[1]
         pad = bucket_cells(total) - total
         if pad:
-            state = jnp.pad(state, ((0, 0), (0, pad)))
-            seeds = jnp.pad(seeds, (0, pad))
-            sigma = jnp.pad(sigma, (0, pad))
-            budget = jnp.pad(budget, (0, pad))
+            st = jnp.pad(st, ((0, 0), (0, pad)))
+            sd = jnp.pad(sd, (0, pad))
+            sg = jnp.pad(sg, (0, pad))
+            bd = jnp.pad(bd, (0, pad))
             fill = np.broadcast_to(
                 np.array([[p.alpha], [p.b_aniso], [1.0]], np.float32),
                 (3, pad))
-            lane_params = jnp.concatenate(
-                [lane_params, jnp.asarray(fill)], axis=1)
+            lp = jnp.concatenate([lp, jnp.asarray(fill)], axis=1)
+        return st, sd, sg, bd, lp
+
+    state, seeds, sigma, budget, lane_params, spans = _pack_inputs()
+    n_slices = n_c * n_t
+    slice_cells = state.shape[1] // n_slices
+    launches = _launch_spans(n_slices, slice_cells, max_cells_per_launch)
+    single_variation = spec is not None and len(launches) == 1
+    if single_variation:
+        state, seeds, sigma, budget, lane_params = _bucket_pad(
+            state, seeds, sigma, budget, lane_params)
         launches = [(0, n_slices)]
 
     ckpt = ((use_cache and len(launches) > 1) if checkpoint is None
             else bool(checkpoint))
+    if multi:
+        assert use_cache, ("multi-process campaigns rendezvous through the "
+                           "content-addressed store; use_cache=False has "
+                           "no channel to exchange slices")
+        ckpt = True                # slice entries ARE the exchange channel
+    skind = f"slice-reduced-{int(n_bins)}" if streaming else "slice-row7"
 
     def span_cols(a: int, b: int) -> Tuple[int, int]:
         c0, c1 = a * slice_cells, b * slice_cells
-        if spec is not None and len(launches) == 1:
+        if single_variation:
             c1 = state.shape[1]              # include the total-bucket pad
         return c0, c1
 
     def dispatch(a: int, b: int):
         c0, c1 = span_cols(a, b)
-        return _integrate_sharded(
+        n_dev, plan_cols = _device_plan(c1 - c0, devices)
+        st, sd, sg, bd, lp = _pad_lanes(
             state[:, c0:c1], seeds[c0:c1], sigma[c0:c1], budget[c0:c1],
             None if lane_params is None else lane_params[:, c0:c1],
-            p=p, dt=grid.dt, n_steps=n_static,
-            switch_threshold=float(grid.switch_threshold), backend=backend,
-            n_dev=_usable_devices(c1 - c0, devices), chunk=int(chunk))
+            plan_cols - (c1 - c0), p)
+        fn = _integrate_donated if donate else _integrate_sharded
+        out = fn(st, sd, sg, bd, lp, p=p, dt=grid.dt, n_steps=n_static,
+                 switch_threshold=float(grid.switch_threshold),
+                 backend=backend, n_dev=n_dev, chunk=int(chunk))
+        if not streaming:
+            return out
+        return _reduce_rows(out, kmin_dev, n_slices=b - a,
+                            slice_cells=slice_cells, n_v=n_v, n_s=n_s,
+                            n_steps=n_steps, n_bins=int(n_bins))
 
-    # dispatch every launch before syncing on any of them: jax dispatch is
-    # async, so device compute and D2H transfers pipeline across launches.
-    # Checkpointed launches restore their raw f32 crossing row instead of
-    # dispatching at all; a failed dispatch is deferred to the sync loop's
-    # retry ladder rather than aborting the other launches' overlap.
-    t0 = time.time()
-    rows: List[Optional[np.ndarray]] = [None] * len(launches)
-    outs: List[Optional[object]] = [None] * len(launches)
-    n_resumed = 0
-    for i, (a, b) in enumerate(launches):
-        if ckpt:
-            c0, c1 = span_cols(a, b)
-            hit = _cache.load_arrays(_slice_key(key, a, b, chunk, horizon),
-                                     cache_dir)
-            if (hit is not None and "row7" in hit
-                    and hit["row7"].shape == (c1 - c0,)):
-                rows[i] = hit["row7"]
-                n_resumed += 1
-                continue
-        try:
-            outs[i] = dispatch(a, b)
-        except Exception:                    # retried in the sync loop
-            outs[i] = None
-    for i, (a, b) in enumerate(launches):
-        if rows[i] is not None:
-            continue
+    host_bytes = 0
+    n_computed = 0
+
+    def _fetch(out, a: int, b: int) -> Dict[str, np.ndarray]:
+        """Sync one launch and pull its payload to host — the ONLY
+        device-to-host transfer of the campaign, which ``host_bytes``
+        meters (dense: the full (8, cells) block; streaming: the reduced
+        counts + histogram, O(grid points))."""
+        nonlocal host_bytes
+        c0, c1 = span_cols(a, b)
+        if streaming:
+            wer_d, hist_d = out
+            wer = np.asarray(jax.block_until_ready(wer_d))
+            hist = np.asarray(jax.block_until_ready(hist_d))
+            host_bytes += wer.nbytes + hist.nbytes
+            return {"wer": wer, "hist": hist}
+        blk = np.asarray(jax.block_until_ready(out))
+        host_bytes += blk.nbytes
+        return {"row7": blk[7][: c1 - c0]}   # trim any device-plan pad
+
+    def _payload_ok(hit, a: int, b: int) -> bool:
+        if hit is None:
+            return False
+        if streaming:
+            return ("wer" in hit and "hist" in hit
+                    and hit["wer"].shape == (b - a, n_v, n_p)
+                    and hit["hist"].shape == (b - a, n_v, int(n_bins)))
+        c0, c1 = span_cols(a, b)
+        return "row7" in hit and hit["row7"].shape == (c1 - c0,)
+
+    def _store_slice(a: int, b: int, payload) -> None:
+        _cache.store_arrays(
+            _slice_key(key, a, b, chunk, horizon, skind), payload,
+            header={"campaign": key, "span": [int(a), int(b)],
+                    "kind": skind},
+            cache_dir=cache_dir)
+
+    def _compute(a: int, b: int, out=None) -> Dict[str, np.ndarray]:
+        """Dispatch (if not already in flight) + sync one launch, with the
+        retry ladder.  Donation can have consumed the packed inputs by the
+        time a retry needs them — detected via ``is_deleted`` and repaired
+        by re-packing (bit-identical by construction)."""
+        nonlocal state, seeds, sigma, budget, lane_params, n_computed
         attempt = 0
         while True:
             try:
-                if outs[i] is None:
-                    outs[i] = dispatch(a, b)
-                rows[i] = np.asarray(jax.block_until_ready(outs[i]))[7]
-                break
+                if out is None:
+                    if donate and state.is_deleted():
+                        state, seeds, sigma, budget, lane_params, _ = (
+                            _pack_inputs())
+                        if single_variation:
+                            state, seeds, sigma, budget, lane_params = (
+                                _bucket_pad(state, seeds, sigma, budget,
+                                            lane_params))
+                    out = dispatch(a, b)
+                payload = _fetch(out, a, b)
+                n_computed += 1
+                return payload
             except Exception:
-                outs[i] = None
+                out = None
                 if attempt >= max_retries:
                     raise
                 time.sleep(retry_backoff_s * (2.0 ** attempt))
                 attempt += 1
-        if ckpt:
-            _cache.store_arrays(
-                _slice_key(key, a, b, chunk, horizon), {"row7": rows[i]},
-                header={"campaign": key, "span": [int(a), int(b)],
-                        "kind": "slice-row7"},
-                cache_dir=cache_dir)
-        if on_slice_complete is not None:
-            on_slice_complete(i, len(launches))
+
+    t0 = time.time()
+    payloads: List[Optional[Dict[str, np.ndarray]]] = [None] * len(launches)
+    n_resumed = 0
+    whole = None
+
+    if not multi:
+        # dispatch every launch before syncing on any of them: jax dispatch
+        # is async, so device compute and D2H transfers pipeline across
+        # launches.  Checkpointed launches restore their stored payload
+        # instead of dispatching at all; a failed dispatch is deferred to
+        # the sync loop's retry ladder rather than aborting the other
+        # launches' overlap.
+        outs: List[Optional[object]] = [None] * len(launches)
+        for i, (a, b) in enumerate(launches):
+            if ckpt:
+                hit = _cache.load_arrays(
+                    _slice_key(key, a, b, chunk, horizon, skind), cache_dir)
+                if _payload_ok(hit, a, b):
+                    payloads[i] = hit
+                    n_resumed += 1
+                    continue
+            try:
+                outs[i] = dispatch(a, b)
+            except Exception:                # retried in the sync loop
+                outs[i] = None
+        for i, (a, b) in enumerate(launches):
+            if payloads[i] is not None:
+                continue
+            payloads[i] = _compute(a, b, out=outs[i])
+            if ckpt:
+                _store_slice(a, b, payloads[i])
+            if on_slice_complete is not None:
+                on_slice_complete(i, len(launches))
+    else:
+        owner = f"proc{mesh.process_index}"
+        skeys = [_slice_key(key, a, b, chunk, horizon, skind)
+                 for a, b in launches]
+
+        def _claim_and_run(i: int) -> None:
+            # holding the claim, re-check the whole-campaign entry: a peer
+            # that already assembled retires the slice checkpoints, and
+            # retirement is strictly ordered AFTER its whole store — so a
+            # vanished slice is always covered by this check and a launch
+            # is never integrated twice (absent a TTL steal)
+            nonlocal whole
+            whole = _load_whole()
+            if whole is not None:
+                _cache.release_claim(skeys[i], cache_dir)
+                return
+            a, b = launches[i]
+            try:
+                payload = _compute(a, b)
+            except Exception:
+                _cache.release_claim(skeys[i], cache_dir)
+                raise
+            _store_slice(a, b, payload)
+            _cache.release_claim(skeys[i], cache_dir)
+            payloads[i] = payload
+            if on_slice_complete is not None:
+                on_slice_complete(i, len(launches))
+
+        # pass A: each process walks the launch ring from its own offset,
+        # claiming and integrating whatever no peer has started — with P
+        # processes over L launches the fleet first-touches disjoint arcs,
+        # so claims rarely collide and work splits ~L/P per process.
+        start = (len(launches) * mesh.process_index) // mesh.process_count
+        for j in range(len(launches)):
+            if whole is not None:
+                break
+            i = (start + j) % len(launches)
+            a, b = launches[i]
+            hit = _cache.load_arrays(skeys[i], cache_dir)
+            if _payload_ok(hit, a, b):
+                payloads[i] = hit
+                n_resumed += 1
+            elif _cache.try_claim(skeys[i], cache_dir, owner=owner):
+                _claim_and_run(i)
+
+        # pass B: poll the store for peers' slices; steal claims older
+        # than the mesh TTL (dead peer — the store's atomicity makes a
+        # double-compute after a steal wasteful, never wrong); bail to the
+        # whole-campaign entry if a peer already assembled and retired the
+        # slice checkpoints (the retirement race, DESIGN.md §14).
+        deadline = time.time() + max(10.0 * mesh.claim_ttl_s, 30.0)
+        while whole is None and any(pl is None for pl in payloads):
+            whole = _load_whole()
+            if whole is not None:
+                break
+            for i, (a, b) in enumerate(launches):
+                if whole is not None or payloads[i] is not None:
+                    continue
+                hit = _cache.load_arrays(skeys[i], cache_dir)
+                if _payload_ok(hit, a, b):
+                    payloads[i] = hit
+                    n_resumed += 1
+                elif _cache.claim_age_s(skeys[i], cache_dir) is None:
+                    if _cache.try_claim(skeys[i], cache_dir, owner=owner):
+                        _claim_and_run(i)
+                elif _cache.steal_claim(skeys[i], mesh.claim_ttl_s,
+                                        cache_dir, owner=owner):
+                    _claim_and_run(i)
+            if whole is None and any(pl is None for pl in payloads):
+                if time.time() > deadline:
+                    raise RuntimeError(
+                        f"campaign {key[:12]}: timed out waiting on peer "
+                        f"slices (ttl {mesh.claim_ttl_s}s)")
+                time.sleep(mesh.poll_s)
     elapsed = time.time() - t0
+
+    if whole is not None:
+        # a peer won the assembly; adopt its durable entry verbatim
+        common = dict(elapsed_s=elapsed, from_cache=True,
+                      n_launches=len(launches), n_resumed=n_resumed,
+                      host_bytes=host_bytes, n_computed=n_computed)
+        if streaming:
+            return _reduced_result(whole["wer"], whole["hist"], **common)
+        return CampaignResult(grid=grid, backend=backend,
+                              crossing_time=whole, **common)
+
+    if streaming:
+        wer_cat = np.concatenate([pl["wer"] for pl in payloads])
+        hist_cat = np.concatenate([pl["hist"] for pl in payloads])
+        if spec is not None:
+            wer_cat = wer_cat.reshape(n_c, n_t, n_v, n_p)
+            hist_cat = hist_cat.reshape(n_c, n_t, n_v, int(n_bins))
+        if use_cache:
+            _cache.store_arrays(
+                red_key, {"wer": wer_cat, "hist": hist_cat},
+                header={"campaign": key, "kind": "reduced",
+                        "n_bins": int(n_bins), "backend": backend},
+                cache_dir=cache_dir)
+        if ckpt:
+            for a, b in launches:
+                _cache.drop_arrays(
+                    _slice_key(key, a, b, chunk, horizon, skind), cache_dir)
+        return _reduced_result(wer_cat, hist_cat, elapsed_s=elapsed,
+                               n_launches=len(launches),
+                               n_resumed=n_resumed, host_bytes=host_bytes,
+                               n_computed=n_computed)
 
     # clip the quantized-horizon sentinel (n_static) back to the grid's
     # horizon: real crossings are <= budget == n_steps and pass unchanged.
     # float64 before the dt multiply — in f32 the sentinel n_steps*dt
     # rounds below the f64 horizon and never-crossed lanes would leak into
     # the switched-only latency reductions
-    row7 = np.minimum(np.concatenate(rows).astype(np.float64),
-                      float(n_steps))
+    row7 = np.minimum(
+        np.concatenate([pl["row7"] for pl in payloads]).astype(np.float64),
+        float(n_steps))
     crossing = np.empty(expect_shape)
     for si, (lo, hi) in enumerate(spans):
         plane = row7[lo:hi].reshape(n_v, n_s) * grid.dt
@@ -551,8 +1035,9 @@ def run_campaign(
         # the whole-campaign entry is durable (or caching is off and the
         # result is in hand) — retire the per-slice resume checkpoints
         for a, b in launches:
-            _cache.drop_arrays(_slice_key(key, a, b, chunk, horizon),
+            _cache.drop_arrays(_slice_key(key, a, b, chunk, horizon, skind),
                                cache_dir)
     return CampaignResult(grid=grid, backend=backend, crossing_time=crossing,
                           elapsed_s=elapsed, n_launches=len(launches),
-                          n_resumed=n_resumed)
+                          n_resumed=n_resumed, host_bytes=host_bytes,
+                          n_computed=n_computed)

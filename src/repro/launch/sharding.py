@@ -49,6 +49,24 @@ def _full_dp_archs() -> Tuple[str, ...]:
     return tuple(x for x in os.environ.get("REPRO_FULL_DP_ARCHS", "").split(",") if x)
 
 
+def plan_cell_tiles(tiles: int, n_dev: int) -> Tuple[int, int]:
+    """Even tiles-per-device plan for the campaign's 1-D ``cells`` mesh.
+
+    Returns ``(tiles_per_dev, padded_tiles)`` with ``padded_tiles`` the
+    smallest multiple of ``n_dev`` >= ``tiles``.  The campaign engine pads
+    the launch with budget-0 lanes up to ``padded_tiles`` instead of
+    demoting the device count — the pre-PR-10 ``_usable_devices`` walked
+    ``n`` down until ``tiles % n == 0``, which silently serialized 3-, 5-
+    and 6-device meshes onto 1-2 devices whenever the pow2 tile bucket
+    didn't divide (tests/test_scale.py pins the fix).  Padding cost is at
+    most ``n_dev - 1`` frozen tiles that exit on their first early-exit
+    chunk.
+    """
+    assert tiles > 0 and n_dev > 0, (tiles, n_dev)
+    per = -(-tiles // n_dev)
+    return per, per * n_dev
+
+
 def param_rules(cfg: ArchConfig, mesh: Mesh, kind: str = "train") -> Dict[str, Tuple[str, ...]]:
     dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     fsdp = cfg.name in FSDP_ARCHS or cfg.name.startswith(tuple(FSDP_ARCHS))

@@ -1,2 +1,4 @@
 from repro.runtime.fault import StepWatchdog, FaultTolerantLoop  # noqa: F401
-from repro.runtime.elastic import plan_elastic_remesh  # noqa: F401
+from repro.runtime.elastic import (plan_elastic_remesh,  # noqa: F401
+                                   plan_campaign_devices)
+from repro.runtime import xla_flags  # noqa: F401

@@ -46,3 +46,32 @@ def plan_elastic_remesh(
                 f"microbatches x{scale} preserves global batch",
             )
     return None
+
+
+def plan_campaign_devices(n_available: int,
+                          old_devices: int) -> ElasticPlan:
+    """Elastic remesh for the Monte-Carlo campaign's 1-D cells mesh.
+
+    A campaign checkpointed at ``old_devices`` local devices resumes on
+    whatever survives: slice checkpoints are keyed by (campaign, span,
+    chunk, horizon) — never by device count — and the cells axis is
+    embarrassingly parallel, so *any* device count reassembles the same
+    crossing rows bit-for-bit (tests/test_scale.py pins a kill-at-4 /
+    resume-at-2 run).  The plan's only real job is keeping the per-launch
+    shard count on the same halving ladder ``plan_elastic_remesh`` uses
+    for training meshes, so a degraded fleet reuses compiled shapes
+    instead of inventing one-off shard widths; ``microbatch_scale``
+    doubles as the wall-clock stretch factor the scheduler should expect
+    per launch.  Campaigns are model_axis=1 by construction (no tensor
+    parallelism over cells), hence the delegation below.
+    """
+    assert old_devices >= 1, old_devices
+    if n_available >= old_devices:
+        return ElasticPlan((old_devices,), ("cells",), 1, "full mesh healthy")
+    plan = plan_elastic_remesh(n_available, model_axis=1,
+                               old_data_axis=old_devices)
+    if plan is None:                      # < 1 device asked for: serialize
+        return ElasticPlan((1,), ("cells",), old_devices,
+                           f"degraded to 1 device, launches x{old_devices}")
+    return ElasticPlan((plan.mesh_shape[0],), ("cells",),
+                       plan.microbatch_scale, plan.note)
